@@ -1,0 +1,56 @@
+"""Paper Fig. 4: training throughput (TGS) of Methods 1/2/3.
+
+CPU-scale reproduction: the smoke DeepSeek-mini config, real wall-clock over
+a few steps per method.  The paper's finding to reproduce: Method 3 (MACT)
+beats Method 2 (fixed c=8) because it uses the smallest chunk count that
+fits (+18.26 % on Model I), and lands within a few percent of (or above)
+Method 1 while Method 1 risks OOM under imbalance.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.configs import get_config
+from repro.core.moe import DistContext
+from repro.training.trainer import Trainer
+
+STEPS = 14
+SEQ = 128
+BATCH = 4
+
+
+def _tgs(use_mact: bool, chunks: int, remat: str = "memfine") -> float:
+    import dataclasses
+    cfg = dataclasses.replace(get_config("deepseek-mini-8l").reduced(),
+                              remat_policy=remat)
+    ctx = DistContext(moe_chunks=chunks)
+    tr = Trainer(cfg, ctx, seq_len=SEQ, global_batch=BATCH, lr=1e-3,
+                 use_mact=use_mact)
+    tr.fit(STEPS)
+    # drop compile steps; min-of-steps is the standard microbenchmark
+    # statistic on a contended core (median still flipped sign run-to-run)
+    best = min(r["time_s"] for r in tr.log[2:])
+    return BATCH * SEQ / best
+
+
+def run() -> list[str]:
+    m1 = _tgs(False, 1, remat="full")      # Megatron full recompute, no chunks
+    m2 = _tgs(False, 8)                    # MemFine fixed c=8
+    m3 = _tgs(True, 1)                     # MemFine + MACT
+    lines = [
+        f"fig4_throughput,method1_full_recompute,tgs={m1:.0f}",
+        f"fig4_throughput,method2_fixed_c8,tgs={m2:.0f}",
+        f"fig4_throughput,method3_mact,tgs={m3:.0f}",
+        f"fig4_throughput,m3_vs_m2,{(m3 / m2 - 1) * 100:+.1f}%"
+        f",paper=+18.26%_modelI",
+        f"fig4_throughput,m3_vs_m1,{(m3 / m1 - 1) * 100:+.1f}%"
+        f",paper=+4.42%_modelII",
+    ]
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,74 @@
+"""Roofline aggregation (deliverable g): reads results/dryrun/*.json and
+emits, per (arch x shape x mesh):
+
+  compute    = HLO_FLOPs(per device) / peak_FLOP/s        [197 TFLOP/s bf16]
+  memory     = HLO_bytes(per device) / HBM_bw             [819 GB/s]
+  collective = collective_bytes(per device) / link_bw     [~50 GB/s ICI]
+
+plus the dominant term, MODEL_FLOPS = 6*N*D (train; 2*N*D inference) with
+N = active params for MoE, and the useful-compute ratio
+MODEL_FLOPS / (chips * HLO_FLOPs_per_device).
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.configs import SHAPES, get_config
+from repro.core.memory_model import active_params, total_params
+
+RESULTS = os.environ.get("DRYRUN_RESULTS", "results/dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_params(cfg) if cfg.moe else total_params(cfg)
+    if shape.mode == "train":
+        toks = shape.global_batch * shape.seq_len
+        return 6 * n * toks
+    if shape.mode == "prefill":
+        toks = shape.global_batch * shape.seq_len
+        return 2 * n * toks
+    return 2 * n * shape.global_batch          # decode: one token per seq
+
+
+def load_records(pattern: str = "*.json") -> list[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(RESULTS, pattern))):
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def summarise(rec: dict) -> str | None:
+    if rec.get("status") == "skipped":
+        return (f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},"
+                f"SKIPPED,{rec.get('reason', '')[:60]}")
+    if rec.get("status") != "ok" or "roofline" not in rec:
+        return (f"roofline,{rec.get('arch')},{rec.get('shape')},"
+                f"{rec.get('mesh')},ERROR,{rec.get('error', '')[:60]}")
+    r = rec["roofline"]
+    chips = 256 if rec["mesh"] == "16x16" else 512
+    mf = model_flops(rec["arch"], rec["shape"])
+    hlo_total = rec["cost"]["flops_per_device"] * chips
+    useful = mf / hlo_total if hlo_total else 0.0
+    return (f"roofline,{rec['arch']},{rec['shape']},{rec['mesh']},"
+            f"tag={rec.get('tag', '')},c={rec.get('chunks', '')},"
+            f"compute_s={r['t_compute_s']:.4f},memory_s={r['t_memory_s']:.4f},"
+            f"collective_s={r['t_collective_s']:.4f},dominant={r['dominant']},"
+            f"useful_flops_ratio={useful:.3f},"
+            f"peak_gb={rec['memory']['peak_device_gb']:.1f}")
+
+
+def run() -> list[str]:
+    recs = [x for x in load_records() if not x.get("tag")]
+    if not recs:
+        return ["roofline,NO_RESULTS (run the dry-run sweep first)"]
+    return [s for s in (summarise(r) for r in recs) if s]
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -1,0 +1,43 @@
+"""Benchmark driver — one module per paper table/figure + the dry-run-derived
+extensions.  Prints ``name,...`` CSV lines per the repo convention.
+
+  PYTHONPATH=src python -m benchmarks.run              # everything
+  PYTHONPATH=src python -m benchmarks.run table4 fig5  # a subset
+"""
+
+from __future__ import annotations
+
+import sys
+import time
+
+from benchmarks import (ablation_capacity, compiled_memory, fig2_distribution,
+                        fig4_throughput, fig5_mact, roofline, table4_memory)
+
+SUITES = {
+    "table4": table4_memory.run,       # Table 4 (memory model, Methods 1/2/3)
+    "fig2": fig2_distribution.run,     # Fig. 2 (token distribution)
+    "fig4": fig4_throughput.run,       # Fig. 4 (TGS Methods 1/2/3)
+    "fig5": fig5_mact.run,             # Fig. 5 (MACT chunk trace)
+    "ablation": ablation_capacity.run, # §2.2: capacity baseline drops tokens
+    "compiled": compiled_memory.run,   # beyond-paper: XLA-measured Table 4
+    "roofline": roofline.run,          # deliverable (g)
+}
+
+
+def main() -> None:
+    names = sys.argv[1:] or list(SUITES)
+    for name in names:
+        fn = SUITES[name]
+        t0 = time.perf_counter()
+        try:
+            lines = fn()
+        except Exception as e:  # noqa: BLE001 — benches report, don't crash
+            lines = [f"{name},ERROR,{type(e).__name__}: {e}"]
+        dt = time.perf_counter() - t0
+        for line in lines:
+            print(line, flush=True)
+        print(f"{name},elapsed_s={dt:.1f}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,60 @@
+"""End-to-end training driver: a ~100M-parameter MoE model trained for a few
+hundred steps with the full stack — synthetic data pipeline, AdamW + cosine
+schedule, MACT dynamic chunking, loss-free router balancing, checkpointing.
+
+  PYTHONPATH=src python examples/train_memfine.py --steps 300
+  (use --steps 30 for a quick look; full run takes a while on 1 CPU core)
+"""
+
+import argparse
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.configs.base import (AttentionSpec, LayerSpec, ModelConfig,
+                                MoEConfig)
+from repro.core.moe import DistContext
+from repro.training.trainer import Trainer
+
+# ~100M-parameter MemFine MoE: 8 layers, d=512, 8 experts top-2.
+CFG = ModelConfig(
+    name="memfine-100m",
+    family="moe",
+    source="examples/train_memfine.py",
+    num_layers=8,
+    d_model=512,
+    num_heads=8,
+    num_kv_heads=4,
+    d_ff=1536,
+    vocab_size=8192,
+    pattern=(LayerSpec(mixer="attn", ffn="moe", attn=AttentionSpec()),),
+    moe=MoEConfig(num_experts=8, top_k=2, d_ff_expert=1024,
+                  loss_free_bias=True),
+    dtype="float32",
+)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--seq-len", type=int, default=256)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--checkpoint-dir", default="/tmp/memfine_100m")
+    args = ap.parse_args()
+
+    from repro.core.memory_model import total_params
+    print(f"model: {total_params(CFG)/1e6:.0f}M params")
+    trainer = Trainer(CFG, DistContext(), seq_len=args.seq_len,
+                      global_batch=args.global_batch, lr=3e-4,
+                      use_mact=True, mact_ep_view=CFG.moe.num_experts,
+                      checkpoint_dir=args.checkpoint_dir,
+                      checkpoint_every=100)
+    state = trainer.fit(args.steps, verbose=True)
+    ce = [r["ce"] for r in trainer.log]
+    print(f"\nCE {ce[0]:.3f} -> {ce[-1]:.3f} over {args.steps} steps; "
+          f"chunk trace tail: {trainer.chunk_trace[-10:]}")
+    assert ce[-1] < ce[0], "loss should decrease"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,86 @@
+#!/usr/bin/env python3
+"""Regenerate the EXPERIMENTS.md dry-run/roofline tables from results/dryrun.
+
+  PYTHONPATH=src python scripts_tables.py > results/tables.md
+"""
+
+import glob
+import json
+import os
+import sys
+
+sys.path.insert(0, "src")
+from repro.configs import SHAPES, get_config                      # noqa: E402
+from repro.core.memory_model import active_params, total_params   # noqa: E402
+
+RESULTS = "results/dryrun"
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def model_flops(arch, shape_name):
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_params(cfg) if cfg.moe else total_params(cfg)
+    if shape.mode == "train":
+        return 6 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2 * n * shape.global_batch * shape.seq_len
+    return 2 * n * shape.global_batch
+
+
+def load():
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(RESULTS, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        recs[(r.get("arch"), r.get("shape"), r.get("mesh"),
+              r.get("tag", ""))] = r
+    return recs
+
+
+def fmt_row(r):
+    arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+    if r["status"] == "skipped":
+        return f"| {arch} | {shape} | {mesh} | — | skipped: sub-quadratic rule |||||||"
+    if r["status"] != "ok":
+        return f"| {arch} | {shape} | {mesh} | — | ERROR {r.get('error','')[:40]} |||||||"
+    ro, m, c = r["roofline"], r["memory"], r["cost"]
+    chips = 512 if mesh == "2x16x16" else 256
+    mf = model_flops(arch, shape)
+    useful = mf / max(c["flops_per_device"] * chips, 1)
+    return (f"| {arch} | {shape} | {mesh} | c={r.get('chunks','')} "
+            f"| {ro['t_compute_s']:.3f} | {ro['t_memory_s']:.3f} "
+            f"| {ro['t_collective_s']:.3f} | **{ro['dominant']}** "
+            f"| {min(useful, 99):.2f} | {m['peak_device_gb']:.1f} "
+            f"| {r['collectives']['total_bytes'] / 1e9:.0f} |")
+
+
+HEADER = ("| arch | shape | mesh | chunks | compute s | memory s | collective s "
+          "| dominant | useful-FLOPs ratio | peak GB/dev | coll GB/dev |\n"
+          "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def main():
+    recs = load()
+    archs = sorted({k[0] for k in recs if k[0]})
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh} ({256 if mesh == '16x16' else 512} chips)\n")
+        print(HEADER)
+        for arch in archs:
+            for shape in SHAPE_ORDER:
+                r = recs.get((arch, shape, mesh, ""))
+                if r:
+                    print(fmt_row(r))
+    print("\n### Optimized-variant records (tags)\n")
+    print(HEADER.replace("| chunks |", "| tag/chunks |"))
+    for key in sorted(recs):
+        if key[3]:
+            r = recs[key]
+            row = fmt_row(r)
+            row = row.replace(f"| c={r.get('chunks','')} ",
+                              f"| {key[3]} c={r.get('chunks','')} ", 1)
+            print(row)
+
+
+if __name__ == "__main__":
+    main()

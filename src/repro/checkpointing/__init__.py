@@ -1,0 +1,1 @@
+from repro.checkpointing.io import latest_step, restore, save

@@ -1,0 +1,4 @@
+from repro.core.chunking import chunked_map
+from repro.core.mact import MACTController
+from repro.core.moe import DistContext, init_moe, moe_ffn, resolve_strategy
+from repro.core.router import init_router, route, update_bias

@@ -1,0 +1,41 @@
+"""FCDA — Fine-grained Chunk Distribution Algorithm (paper §4.1).
+
+Forward (Eq. 6): tokens are split into ``c`` chunks; each chunk runs
+dispatch -> expert compute -> combine *sequentially*; outputs concatenate.
+Backward (Eq. 7): each chunk is recomputed independently — expressed here as
+``jax.checkpoint`` around the chunk body under a sequential ``lax.scan``, so
+both the live dispatch buffers and the saved residuals scale with one chunk,
+not the whole token set.  Peak MoE activation drops by (c-1)/c (DESIGN.md §2).
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+
+def chunked_map(fn: Callable, x: jax.Array, num_chunks: int, *,
+                remat: bool = True):
+    """Apply ``fn`` chunk-by-chunk over the leading (token) axis of ``x``.
+
+    fn: (chunk_tokens, ...) -> (y_chunk, stats_pytree).  Stats are summed
+    across chunks (router loads, aux losses, drop counts are all additive).
+    Returns (y, stats) with y matching x's leading axis.
+    """
+    T = x.shape[0]
+    if T % num_chunks:
+        raise ValueError(f"token count {T} not divisible by c={num_chunks}")
+    body = jax.checkpoint(fn) if remat else fn
+
+    if num_chunks == 1:
+        return body(x)
+
+    xs = x.reshape(num_chunks, T // num_chunks, *x.shape[1:])
+    # lax.map = sequential scan: only ONE chunk's dispatch buffers are ever
+    # live; jax.checkpoint on the body makes the backward pass recompute each
+    # chunk independently (Eq. 7).  Stats leaves are tiny — stack, then sum.
+    ys, stats = jax.lax.map(body, xs)
+    stats = jax.tree.map(lambda s: s.sum(axis=0), stats)
+    return ys.reshape(T, *ys.shape[2:]), stats

@@ -1,0 +1,157 @@
+"""Sort-based static-shape token dispatch / combine (TPU-idiomatic).
+
+GPU MemFine permutes tokens with dynamic ``index_select``; on TPU all shapes
+are static, so we rank token-slots within their target group via a stable
+argsort + exclusive-cumsum and scatter into fixed ``(groups, capacity)``
+buffers (scatter mode='drop' discards capacity overflow, which is impossible
+under dropless capacity but counted for the GShard-style capacity baseline).
+
+The same machinery serves two layers of the stack:
+  * grouping by *expert* for local expert compute, and
+  * grouping by *target device* for the all-to-all EP path (core/ep.py).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class DispatchPlan(NamedTuple):
+    slots: jax.Array      # (T, K) int32 — flat position in (G*capacity), -1 = dropped
+    load: jax.Array       # (G,) int32 — demand per group (before capacity clip)
+    drops: jax.Array      # scalar int32 — token-slots that exceeded capacity
+
+
+def make_plan(group_idx: jax.Array, num_groups: int, capacity: int) -> DispatchPlan:
+    """group_idx: (T, K) int32 in [0, num_groups) -> scatter plan."""
+    T, K = group_idx.shape
+    flat = group_idx.reshape(-1)
+    order = jnp.argsort(flat, stable=True)                # token-slots grouped
+    sorted_g = flat[order]
+    load = jnp.zeros((num_groups,), jnp.int32).at[flat].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32), jnp.cumsum(load)[:-1]])
+    ranks = jnp.arange(T * K, dtype=jnp.int32) - starts[sorted_g]
+    ok = ranks < capacity
+    slot_sorted = jnp.where(ok, sorted_g * capacity + ranks, -1)
+    slots = jnp.zeros((T * K,), jnp.int32).at[order].set(slot_sorted)
+    drops = (T * K - ok.sum()).astype(jnp.int32)
+    return DispatchPlan(slots.reshape(T, K), load, drops)
+
+
+def scatter_rows(x: jax.Array, plan: DispatchPlan, num_groups: int,
+                 capacity: int) -> jax.Array:
+    """x: (T, d) -> buffer (G, capacity, d); each token copied to its K slots."""
+    T, d = x.shape
+    K = plan.slots.shape[1]
+    flat_slots = plan.slots.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    buf = jnp.zeros((num_groups * capacity, d), x.dtype)
+    idx = jnp.where(flat_slots >= 0, flat_slots, num_groups * capacity)
+    buf = buf.at[idx].add(x[tok], mode="drop")
+    return buf.reshape(num_groups, capacity, d)
+
+
+def scatter_values(vals: jax.Array, plan: DispatchPlan, num_groups: int,
+                   capacity: int, fill=0) -> jax.Array:
+    """vals: (T, K) per-slot payload (e.g. expert ids) -> (G, capacity)."""
+    flat_slots = plan.slots.reshape(-1)
+    flat_vals = vals.reshape(-1)
+    out = jnp.full((num_groups * capacity,), fill, vals.dtype)
+    idx = jnp.where(flat_slots >= 0, flat_slots, num_groups * capacity)
+    out = out.at[idx].set(flat_vals, mode="drop")
+    return out.reshape(num_groups, capacity)
+
+
+def gather_rows(buf: jax.Array, plan: DispatchPlan,
+                weights: jax.Array | None = None) -> jax.Array:
+    """Inverse of scatter_rows: buffer (G, C, d) -> (T, d), summing the K slots
+    (optionally weighted by the router combine weights)."""
+    G, C, d = buf.shape
+    flat = buf.reshape(G * C, d)
+    slots = plan.slots                                     # (T, K)
+    valid = (slots >= 0).astype(flat.dtype)[..., None]     # (T, K, 1)
+    rows = jnp.take(flat, jnp.maximum(slots, 0), axis=0)   # (T, K, d)
+    if weights is not None:
+        rows = rows * weights[..., None].astype(flat.dtype)
+    return (rows * valid).sum(axis=1)
+
+
+class RaggedPlan(NamedTuple):
+    slots: jax.Array            # (T, K) int32 — flat row index, -1 dropped
+    block_to_expert: jax.Array  # (R//bm,) int32
+    total_rows: jax.Array       # scalar int32 (bm-aligned occupied rows)
+    load: jax.Array             # (G,) int32
+    drops: jax.Array            # scalar int32
+
+
+def make_ragged_plan(group_idx: jax.Array, num_groups: int, rows: int,
+                     block_m: int, valid: jax.Array | None = None) -> RaggedPlan:
+    """MegaBlocks-style flat layout: rows grouped by expert, every group
+    padded to a block_m multiple so each row-block maps to ONE expert.
+
+    group_idx: (T, K); ``rows`` is the static buffer size (worst case +
+    num_groups*block_m padding).  ``valid`` masks slots to exclude."""
+    T, K = group_idx.shape
+    flat = group_idx.reshape(-1)
+    if valid is not None:
+        flat = jnp.where(valid.reshape(-1), flat, num_groups)
+    order = jnp.argsort(flat, stable=True)
+    sorted_g = flat[order]
+    ext_load = jnp.zeros((num_groups + 1,), jnp.int32).at[
+        jnp.minimum(flat, num_groups)].add(1)
+    load = ext_load[:num_groups]
+    aligned = -(-load // block_m) * block_m                # per-group padded
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(aligned)])        # (G+1,)
+    ranks = jnp.arange(T * K, dtype=jnp.int32) - jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(ext_load)])[:-1][sorted_g]
+    slot_sorted = jnp.where(
+        (sorted_g < num_groups) & (starts[jnp.minimum(sorted_g, num_groups)]
+                                   + ranks < rows),
+        starts[jnp.minimum(sorted_g, num_groups)] + ranks, -1)
+    slots = jnp.zeros((T * K,), jnp.int32).at[order].set(slot_sorted)
+    n_valid = (flat < num_groups).sum()
+    drops = (n_valid - (slot_sorted >= 0).sum()).astype(jnp.int32)
+    # block -> expert: block b belongs to group g iff starts[g] <= b*bm
+    block_starts = jnp.arange(rows // block_m, dtype=jnp.int32) * block_m
+    b2e = jnp.clip(
+        jnp.searchsorted(starts[1:], block_starts, side="right"),
+        0, num_groups - 1).astype(jnp.int32)
+    return RaggedPlan(slots.reshape(T, K), b2e, starts[-1], load, drops)
+
+
+def scatter_rows_flat(x: jax.Array, slots: jax.Array, rows: int) -> jax.Array:
+    """x: (T, d), slots: (T, K) -> flat buffer (rows, d)."""
+    T, d = x.shape
+    K = slots.shape[1]
+    flat_slots = slots.reshape(-1)
+    tok = jnp.repeat(jnp.arange(T, dtype=jnp.int32), K)
+    buf = jnp.zeros((rows, d), x.dtype)
+    idx = jnp.where(flat_slots >= 0, flat_slots, rows)
+    return buf.at[idx].add(x[tok], mode="drop")
+
+
+def gather_rows_flat(buf: jax.Array, slots: jax.Array,
+                     weights: jax.Array | None = None) -> jax.Array:
+    """Inverse of scatter_rows_flat: (rows, d) -> (T, d) summing K slots."""
+    valid = (slots >= 0).astype(buf.dtype)[..., None]
+    out = jnp.take(buf, jnp.maximum(slots, 0), axis=0)     # (T, K, d)
+    if weights is not None:
+        out = out * weights[..., None].astype(buf.dtype)
+    return (out * valid).sum(axis=1)
+
+
+def dropless_capacity(tokens: int) -> int:
+    """Worst-case per-group capacity for dropless dispatch: the K experts a
+    token picks are distinct, so one expert can receive at most T tokens."""
+    return tokens
+
+
+def balanced_capacity(tokens: int, top_k: int, num_groups: int,
+                      factor: float) -> int:
+    """GShard-style capped capacity (the accuracy-degrading baseline the paper
+    argues against): factor * T*K/G, rounded up."""
+    return max(1, int(-(-tokens * top_k * factor // num_groups)))

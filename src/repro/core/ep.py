@@ -1,0 +1,141 @@
+"""Expert parallelism via shard_map + lax.all_to_all (the paper's dispatch path).
+
+Megatron MemFine moves tokens between EP ranks with NCCL all-to-alls around
+each expert's GEMM; the JAX/TPU analogue is a ``jax.shard_map`` region over
+the ``model`` mesh axis with explicit ``lax.all_to_all`` collectives, one
+dispatch + one combine per FCDA chunk (DESIGN.md §2).
+
+Buffer sizing is the heart of the memory story: under dropless routing the
+send block per peer must hold the worst case (every local token-slot targets
+one peer -> cap_send = T_chunk*K) and the local expert buffer the group worst
+case (every group token lands on one local expert -> cap_recv = P*T_chunk).
+Unchunked, that is the paper's `s' -> e*s` blow-up *by construction*; FCDA
+divides both by the chunk count c.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import MoEConfig
+from repro.core import dispatch as dsp
+from repro.core.chunking import chunked_map
+from repro.core.router import route
+from repro.kernels.ops import expert_ffn, ragged_expert_ffn
+
+RAGGED_BLOCK = 128
+
+
+def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
+              chunks: int, remat: bool, ep_axis: str, all_axes: tuple,
+              use_pallas: bool, ragged: bool = False,
+              interpret: bool = False):
+    """Per-device body. x_l: (B_l, S_l, d) local tokens."""
+    peers = lax.axis_size(ep_axis)
+    rank = lax.axis_index(ep_axis)
+    E = moe_cfg.num_experts
+    e_local = E // peers
+    b_l, s_l, d = x_l.shape
+    tokens = b_l * s_l
+    x2 = x_l.reshape(tokens, d)
+    k = moe_cfg.top_k
+
+    def chunk_fn(xc):
+        t_c = xc.shape[0]
+        r = route({"w": router_w, "bias": router_b}, xc, moe_cfg)
+        if moe_cfg.capacity_mode == "dropless":
+            # a token's k experts are distinct, so at most min(k, E_local) of
+            # its slots can target one peer, and at most one can land on a
+            # given expert — exact worst cases, not heuristics
+            cap_send = t_c * min(k, e_local)
+            cap_recv = peers * t_c
+        else:
+            cap_send = dsp.balanced_capacity(t_c, k, peers, moe_cfg.capacity_factor)
+            cap_recv = dsp.balanced_capacity(peers * t_c, k, E,
+                                             moe_cfg.capacity_factor)
+        # ---- dispatch: group token-slots by target device, exchange --------
+        target_dev = r.expert_idx // e_local                       # (t_c, k)
+        plan_s = dsp.make_plan(target_dev, peers, cap_send)
+        send = dsp.scatter_rows(xc, plan_s, peers, cap_send)       # (P, cap_s, d)
+        send_eid = dsp.scatter_values(r.expert_idx, plan_s, peers, cap_send,
+                                      fill=jnp.int32(-1))          # (P, cap_s)
+        recv = lax.all_to_all(send, ep_axis, 0, 0, tiled=True)
+        recv_eid = lax.all_to_all(send_eid, ep_axis, 0, 0, tiled=True)
+        # ---- local expert compute ----------------------------------------
+        rows = recv.reshape(peers * cap_send, d)
+        flat_eid = recv_eid.reshape(-1)
+        valid = flat_eid >= 0
+        local_e = jnp.where(valid, flat_eid - rank * e_local, e_local)
+        if ragged:
+            # MegaBlocks-style flat layout: R worst-case rows + block padding
+            # instead of (E_local, cap_recv) per-expert buffers — E_local/k
+            # fewer buffer rows, and the Pallas kernel predicates off blocks
+            # past the actual load (EXPERIMENTS.md §Perf).
+            R = peers * cap_send + e_local * RAGGED_BLOCK
+            R = -(-R // RAGGED_BLOCK) * RAGGED_BLOCK
+            plan_r = dsp.make_ragged_plan(local_e[:, None], e_local, R,
+                                          RAGGED_BLOCK,
+                                          valid=valid[:, None])
+            buf = dsp.scatter_rows_flat(rows, plan_r.slots, R)
+            h = ragged_expert_ffn(buf, w1, w3, w2, plan_r.block_to_expert,
+                                  plan_r.total_rows, block_m=RAGGED_BLOCK,
+                                  use_pallas=use_pallas, interpret=interpret)
+            back = dsp.gather_rows_flat(h, plan_r.slots)
+            back = back.reshape(peers, cap_send, d)
+            drops_e = plan_r.drops
+        else:
+            plan_e = dsp.make_plan(local_e[:, None], e_local + 1, cap_recv)
+            buf = dsp.scatter_rows(rows, plan_e, e_local + 1, cap_recv)
+            h = expert_ffn(buf[:e_local], w1, w3, w2, use_pallas=use_pallas,
+                           interpret=interpret)
+            h = jnp.concatenate([h, jnp.zeros((1,) + h.shape[1:], h.dtype)],
+                                axis=0)
+            back = dsp.gather_rows(h, plan_e).reshape(peers, cap_send, d)
+            # overflow in the padding (invalid-row) group is not a real drop
+            drops_e = jnp.sum((plan_e.slots.reshape(-1) == -1) & valid)
+        # ---- combine: return rows to their senders, weight, reduce --------
+        recv_back = lax.all_to_all(back, ep_axis, 0, 0, tiled=True)
+        y = dsp.gather_rows(recv_back, plan_s, r.weights)          # (t_c, d)
+        stats = {
+            "aux_loss": lax.pmean(r.aux_loss, all_axes),
+            "load": lax.psum(r.load.astype(jnp.float32), all_axes),
+            "drops": lax.psum((plan_s.drops + drops_e).astype(jnp.float32),
+                              all_axes),
+        }
+        return y, stats
+
+    y, stats = chunked_map(chunk_fn, x2, chunks, remat=remat)
+    return y.reshape(b_l, s_l, d), stats
+
+
+def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
+               batch_axes: tuple = ("data",), ep_axis: str = "model",
+               chunks: int = 1, remat: bool = True,
+               use_pallas: bool = False, ragged: bool = False,
+               interpret: bool = False):
+    """x: (B, S, d) global -> (y, stats).  B sharded over batch_axes, S over
+    ep_axis (the EP group = one row of the model axis)."""
+    all_axes = tuple(batch_axes) + (ep_axis,)
+    fn = functools.partial(
+        _ep_local, moe_cfg=moe_cfg, chunks=chunks, remat=remat,
+        ep_axis=ep_axis, all_axes=all_axes, use_pallas=use_pallas,
+        ragged=ragged, interpret=interpret)
+    x_spec = P(tuple(batch_axes), ep_axis, None)
+    stats_spec = {"aux_loss": P(), "load": P(None), "drops": P()}
+    return jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(x_spec, P(None, None), P(None),
+                  P(ep_axis, None, None), P(ep_axis, None, None),
+                  P(ep_axis, None, None)),
+        out_specs=(x_spec, stats_spec),
+        # pallas_call (interpret) emits ShapeDtypeStructs without vma info;
+        # manual-axis correctness is covered by tests/test_distributed.py
+        check_vma=False,
+    )(x, params["router"]["w"], params["router"]["bias"],
+      params["w1"], params["w3"], params["w2"])

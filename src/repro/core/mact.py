@@ -1,0 +1,105 @@
+"""MACT — Memory-Aware Chunk Tuning (paper §4.2).
+
+Before training, MACT models memory from the config (Eq. 1-2), inverts it for
+the max admissible per-device token count s'_max (Eq. 8), and derives the
+optimal chunk count c = ceil(s''/s'_max) (Eq. 9) from the predicted/observed
+received tokens s''.  Because re-deriving c exactly each step is wasteful
+(and, under XLA, each distinct c is a recompile), MACT snaps c to a bin from
+a threshold set — we follow the paper's [1, 2, 4, 8] — and adjusts the bin
+dynamically as the routing distribution evolves.
+
+On host, between steps: the trainer feeds back the per-layer expert load
+vector from the previous step; ``observed_s_pp`` turns it into the worst
+per-device received-token count; ``choose`` returns the bin.  Compiled step
+variants are cached per bin by the trainer (<= len(bins) compilations).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional, Sequence
+
+import numpy as np
+
+from repro.configs.base import HardwareProfile, ModelConfig
+from repro.core import memory_model as mm
+
+
+@dataclass
+class MACTController:
+    cfg: ModelConfig
+    par: mm.Parallelism
+    hw: HardwareProfile
+    seq_len: int
+    bins: Sequence[int] = (1, 2, 4, 8)
+    copies: int = 1                      # m_g: stored activation copies
+    dtype_bytes: int = 2
+    bytes_per_param: float = mm.TRAIN_STATE_BYTES
+    static_override: Optional[float] = None   # use a *measured* M_sta instead
+    history: list = field(default_factory=list)
+
+    def __post_init__(self):
+        self.dims = mm.LayerDims.from_config(self.cfg)
+        self.static = (self.static_override if self.static_override is not None
+                       else mm.static_bytes(self.cfg, self.par, self.bytes_per_param))
+
+    # -- Eq. 8 ---------------------------------------------------------------
+    def s_prime_max(self) -> float:
+        return mm.s_prime_max(self.dims, self.seq_len, self.par, self.hw,
+                              self.static, copies=self.copies,
+                              dtype_bytes=self.dtype_bytes)
+
+    # -- s'' from router statistics -------------------------------------------
+    def observed_s_pp(self, load: np.ndarray, ep_size: Optional[int] = None) -> float:
+        """Worst per-device received-token count from a global expert-load
+        vector (token-slots per expert, summed over the step)."""
+        e = ep_size or self.par.e
+        load = np.asarray(load, dtype=np.float64)
+        if load.size % e == 0:
+            per_dev = load.reshape(e, -1).sum(axis=1)
+        else:
+            per_dev = load
+        # normalise to a per-microbatch count on the hottest device
+        return float(per_dev.max())
+
+    # -- Eq. 9 + threshold binning --------------------------------------------
+    def optimal_c(self, s_pp: float) -> int:
+        return mm.optimal_chunks(s_pp, self.s_prime_max())
+
+    def snap(self, c: int) -> int:
+        """Paper: "select the large bin that is closest to c" — the smallest
+        bin >= c (conservative on memory); the largest bin if none covers."""
+        for b in sorted(self.bins):
+            if b >= c:
+                return b
+        return max(self.bins)
+
+    def choose(self, load: Optional[np.ndarray] = None,
+               ep_size: Optional[int] = None) -> int:
+        """Pick the chunk bin for the next step.
+
+        With no observation yet (step 0) MACT plans for the theoretical worst
+        case `s' -> e*s*k` (paper §3) — the safe cold-start the paper uses.
+        """
+        if load is None:
+            s_pp = mm.worst_case_s_prime(self.seq_len, self.par, self.dims.topk)
+        else:
+            s_pp = self.observed_s_pp(load, ep_size)
+        c = self.optimal_c(s_pp)
+        b = self.snap(c)
+        self.history.append({"s_pp": s_pp, "c_star": c, "bin": b})
+        return b
+
+    # -- reporting -------------------------------------------------------------
+    def memory_report(self, s_pp: float, chunks: int) -> dict:
+        act = mm.activation_bytes(self.dims, self.seq_len, s_pp, self.par,
+                                  copies=self.copies, chunks=chunks,
+                                  dtype_bytes=self.dtype_bytes)
+        return {
+            "static_gb": self.static / 2**30,
+            "activation_gb": act / 2**30,
+            "total_gb": (self.static + act) / 2**30,
+            "fits": mm.fits(self.static, act, self.hw),
+            "s_prime_max": self.s_prime_max(),
+            "chunks": chunks,
+        }

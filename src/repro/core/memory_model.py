@@ -1,0 +1,222 @@
+"""MemFine's theoretical memory cost model (paper §3, Table 2, Eq. 1-3, 8-9).
+
+Notation follows the paper's Table 1:
+  s   sequence length            s'  tokens received by the MoE layer per GPU
+  h   hidden size                a   attention heads       h_d  head dim
+  k_a kv heads                   e_n router width (#experts; Table 2 row 10)
+  g_d dense-FFN intermediate     g_e expert-FFN intermediate
+  t/p/c/e/d  tensor/pipeline/context/expert/data parallel sizes
+  b   micro batch                v   virtual pipeline stages per GPU
+  D_t bytes per element (bf16 -> 2)
+
+Eq. (2): M_act = m_g/(t*c) * D_t*b * [ s*(5h + a*h_d + 2*k_a*h_d + e_n)
+                                       + s'*(2h + 2*g_e) ]
+with m_g = v*p + p - 2*r_pp - 1 activation copies in flight for pipeline rank
+r_pp, and m_g = 1 under full recomputation.
+
+MemFine (FCDA) replaces the s' term's single buffer with the max over c
+chunks; under a uniform chunk split that is s'/c — Eq. (6)-(7)'s memory
+reduction.  Eq. (8) inverts the model for the max admissible s' and Eq. (9)
+derives the optimal chunk count, which MACT snaps to a threshold bin.
+"""
+
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+from repro.configs.base import HardwareProfile, ModelConfig
+
+
+@dataclass(frozen=True)
+class Parallelism:
+    """Paper Table 1 parallelism sizes (Megatron-style)."""
+    t: int = 1      # tensor
+    p: int = 1      # pipeline
+    c: int = 1      # context
+    e: int = 1      # expert
+    d: int = 1      # data
+    b: int = 1      # micro batch
+    v: int = 1      # virtual pipeline stages per GPU
+
+
+@dataclass(frozen=True)
+class LayerDims:
+    """Table 1 model dims for one transformer layer."""
+    h: int
+    a: int
+    h_d: int
+    k_a: int
+    e_n: int        # router width = number of experts (Table 2 input 10)
+    g_d: int
+    g_e: int
+    topk: int = 1
+
+    @classmethod
+    def from_config(cls, cfg: ModelConfig) -> "LayerDims":
+        moe = cfg.moe
+        return cls(
+            h=cfg.d_model,
+            a=cfg.num_heads,
+            h_d=cfg.resolved_head_dim,
+            k_a=cfg.num_kv_heads,
+            e_n=moe.num_experts if moe else 0,
+            g_d=cfg.d_ff,
+            g_e=moe.d_ff_expert if moe else 0,
+            topk=moe.top_k if moe else 1,
+        )
+
+
+# ---------------------------------------------------------------------------
+# activation memory (Eq. 2)
+# ---------------------------------------------------------------------------
+
+def m_g(par: Parallelism, r_pp: int = 0, full_recompute: bool = False) -> int:
+    """Number of stored layer-activation copies (paper §3)."""
+    if full_recompute:
+        return 1
+    return max(1, par.v * par.p + par.p - 2 * r_pp - 1)
+
+
+def shared_act_bytes(dims: LayerDims, s: int, par: Parallelism,
+                     dtype_bytes: int = 2) -> float:
+    """The sequence-proportional (attention + router) term of Table 2."""
+    per_tok = 5 * dims.h + dims.a * dims.h_d + 2 * dims.k_a * dims.h_d + dims.e_n
+    return dtype_bytes * par.b * s * per_tok / (par.t * par.c)
+
+
+def moe_act_bytes(dims: LayerDims, s_prime: float, par: Parallelism,
+                  dtype_bytes: int = 2) -> float:
+    """The received-token-proportional MoE term of Table 2."""
+    return dtype_bytes * par.b * s_prime * (2 * dims.h + 2 * dims.g_e) / (par.t * par.c)
+
+
+def activation_bytes(dims: LayerDims, s: int, s_prime: float, par: Parallelism,
+                     *, copies: int = 1, chunks: int = 1,
+                     dtype_bytes: int = 2) -> float:
+    """Eq. (2) peak activation, with FCDA chunking dividing the MoE term.
+
+    ``chunks=1`` is the standard (paper Method 1) layout; ``chunks=c`` models
+    MemFine where only one chunk's dispatch buffers are live/stored at a time.
+    """
+    shared = shared_act_bytes(dims, s, par, dtype_bytes)
+    moe = moe_act_bytes(dims, s_prime, par, dtype_bytes) / chunks
+    return copies * (shared + moe)
+
+
+def worst_case_s_prime(s: int, par: Parallelism, topk: int = 1) -> int:
+    """Theoretical peak received tokens: every token-slot in the EP group lands
+    on one GPU (paper §3: "s' approaches e*s"; with top-k slots, e*s*k)."""
+    return par.e * par.b * s * topk
+
+
+# ---------------------------------------------------------------------------
+# static memory (Eq. 1)
+# ---------------------------------------------------------------------------
+
+#: bytes of training state per parameter.  Megatron-style BF16 mixed precision:
+#: bf16 weight (2) + fp32 grad (4) + fp32 master (4) + Adam m, v (8).
+TRAIN_STATE_BYTES = 18
+WEIGHT_ONLY_BYTES = 2
+
+
+def param_counts(cfg: ModelConfig, par: Parallelism) -> dict[str, float]:
+    """Per-GPU parameter counts by module group (Eq. 1's S_i^para)."""
+    h = cfg.d_model
+    hd = cfg.resolved_head_dim
+    counts: dict[str, float] = {}
+    counts["embed"] = cfg.vocab_size * h / par.t
+    counts["lm_head"] = 0.0 if cfg.tie_embeddings else cfg.vocab_size * h / par.t
+
+    attn = dense_ffn = moe_experts = moe_shared = router = mamba = norms = 0.0
+    for spec in cfg.layer_specs():
+        if spec.mixer == "attn":
+            q = h * cfg.num_heads * hd
+            kv = 2 * h * cfg.num_kv_heads * hd
+            o = cfg.num_heads * hd * h
+            attn += (q + kv + o) / par.t
+        elif spec.mixer == "mamba":
+            d_in = spec.ssm.expand * h
+            nheads = d_in // spec.ssm.head_dim
+            # in_proj (z, x, B, C, dt) + out_proj + conv + A/D/dt_bias
+            in_proj = h * (2 * d_in + 2 * spec.ssm.state_dim * nheads + nheads)
+            out_proj = d_in * h
+            conv = spec.ssm.conv_width * (d_in + 2 * spec.ssm.state_dim * nheads)
+            mamba += (in_proj + out_proj + conv + 3 * nheads) / par.t
+        if spec.ffn == "dense":
+            dense_ffn += 3 * h * cfg.d_ff / par.t
+        elif spec.ffn == "moe":
+            moe = cfg.moe
+            local_experts = max(1, moe.num_experts // par.e)
+            moe_experts += local_experts * 3 * h * moe.d_ff_expert / par.t
+            moe_shared += moe.num_shared_experts * 3 * h * moe.d_ff_expert / par.t
+            router += h * moe.num_experts
+        norms += 2 * h
+    if cfg.encoder_layers:
+        q = h * cfg.num_heads * hd
+        kv = 2 * h * cfg.num_kv_heads * hd
+        o = cfg.num_heads * hd * h
+        # encoder self-attn + ffn, decoder cross-attn
+        attn += cfg.encoder_layers * (q + kv + o) / par.t
+        dense_ffn += cfg.encoder_layers * 3 * h * cfg.d_ff / par.t
+        attn += cfg.num_layers * (q + kv + o) / par.t   # cross attention
+    counts.update(attn=attn, dense_ffn=dense_ffn, moe_experts=moe_experts,
+                  moe_shared=moe_shared, router=router, mamba=mamba, norms=norms)
+    return counts
+
+
+def static_bytes(cfg: ModelConfig, par: Parallelism,
+                 bytes_per_param: float = TRAIN_STATE_BYTES,
+                 per_stage: bool = True) -> float:
+    """Eq. (1): per-GPU static memory.  ``per_stage`` divides layer params by
+    the pipeline size (embedding counted on the first stage)."""
+    counts = param_counts(cfg, par)
+    layer_params = sum(v for k, v in counts.items() if k not in ("embed", "lm_head"))
+    if per_stage:
+        layer_params /= par.p
+    stage0 = counts["embed"] + layer_params
+    return stage0 * bytes_per_param
+
+
+def total_params(cfg: ModelConfig) -> float:
+    """Global parameter count N (for MODEL_FLOPS = 6*N*D in the roofline)."""
+    par = Parallelism()
+    counts = param_counts(cfg, par)
+    return sum(counts.values())
+
+
+def active_params(cfg: ModelConfig) -> float:
+    """Activated parameters per token (MoE: top-k + shared experts only)."""
+    par = Parallelism()
+    counts = param_counts(cfg, par)
+    n = sum(v for k, v in counts.items() if k != "moe_experts")
+    if cfg.moe is not None:
+        frac = (cfg.moe.top_k / cfg.moe.num_experts)
+        n += counts["moe_experts"] * frac
+    return n
+
+
+# ---------------------------------------------------------------------------
+# MACT equations (Eq. 3, 8, 9)
+# ---------------------------------------------------------------------------
+
+def fits(static: float, act: float, hw: HardwareProfile) -> bool:
+    """Eq. (3): M_sta + M_act <= alpha * M_GPU."""
+    return static + act <= hw.alpha * hw.hbm_bytes
+
+
+def s_prime_max(dims: LayerDims, s: int, par: Parallelism, hw: HardwareProfile,
+                static: float, *, copies: int = 1, dtype_bytes: int = 2) -> float:
+    """Eq. (8): the max per-GPU received-token count that still fits."""
+    budget = hw.alpha * hw.hbm_bytes - static - copies * shared_act_bytes(
+        dims, s, par, dtype_bytes)
+    denom = copies * dtype_bytes * par.b * (2 * dims.h + 2 * dims.g_e) / (par.t * par.c)
+    return budget / denom
+
+
+def optimal_chunks(s_pp: float, s_max: float) -> int:
+    """Eq. (9): c = ceil(s'' / s'_max).  Non-positive s_max means even one
+    token per chunk cannot fit -> return a sentinel large value."""
+    if s_max <= 0:
+        return 1 << 30
+    return max(1, math.ceil(s_pp / s_max))

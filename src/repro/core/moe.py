@@ -1,0 +1,186 @@
+"""The MemFine MoE layer: router + FCDA chunking + selectable expert strategy.
+
+Strategies (DESIGN.md §2):
+  * ``ep_shardmap`` — experts sharded over the model axis, explicit
+    all-to-all dispatch/combine per chunk (core/ep.py).  Requires the expert
+    count, batch and sequence to divide the mesh axes.
+  * ``tp_gspmd``    — experts replicated, expert FFN tensor-parallel on d_ff
+    via GSPMD; dispatch is per-sequence-row (vmapped), so the sort never
+    crosses devices.  Works for any expert count and for tiny decode batches.
+  * ``dense``       — every expert on every token, masked combine.  O(E)
+    compute; only used as a numerical oracle in tests.
+
+All strategies share the same router and the same FCDA chunk loop, so Method
+1/2/3 comparisons (paper §5) are pure config switches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+from repro.core import dispatch as dsp
+from repro.core.chunking import chunked_map
+from repro.core.ep import moe_ffn_ep
+from repro.core.router import init_router, route
+from repro.kernels.ops import expert_ffn
+
+
+@dataclass(frozen=True)
+class DistContext:
+    """How the current step is distributed; plumbed through the model."""
+    mesh: Optional[object] = None          # jax.sharding.Mesh or None (local)
+    batch_axes: tuple = ("data",)
+    ep_axis: str = "model"
+    moe_chunks: int = 1                    # FCDA chunk count (MACT-selected)
+    remat_chunks: bool = True              # Eq. (7) per-chunk recomputation
+    use_pallas: bool = False
+    pallas_interpret: bool = False         # lower kernels in interpret mode
+                                           # (CPU dry-run of the kernel path)
+    moe_strategy: str = "auto"             # overrides MoEConfig.strategy
+    moe_ragged: bool = False               # MegaBlocks-style flat expert buffers
+    act_pspec: Optional[object] = None     # PartitionSpec for (B, S, d) activations
+    logits_pspec: Optional[object] = None  # PartitionSpec for (B, S, V) logits
+    heads_pspec: Optional[object] = None   # PartitionSpec for (B, S, H, hd) q/k/v
+
+
+def init_moe(key: jax.Array, d_model: int, cfg: MoEConfig,
+             dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 7)
+    E, f = cfg.num_experts, cfg.d_ff_expert
+    scale_in = d_model ** -0.5
+    scale_out = f ** -0.5
+    params = {
+        "router": init_router(ks[0], d_model, E),
+        "w1": jax.random.normal(ks[1], (E, d_model, f), dtype) * scale_in,
+        "w3": jax.random.normal(ks[2], (E, d_model, f), dtype) * scale_in,
+        "w2": jax.random.normal(ks[3], (E, f, d_model), dtype) * scale_out,
+    }
+    if cfg.num_shared_experts:
+        fs = cfg.num_shared_experts * f
+        params["shared"] = {
+            "w1": jax.random.normal(ks[4], (d_model, fs), dtype) * scale_in,
+            "w3": jax.random.normal(ks[5], (d_model, fs), dtype) * scale_in,
+            "w2": jax.random.normal(ks[6], (fs, d_model), dtype) * scale_out,
+        }
+    return params
+
+
+def resolve_strategy(cfg: MoEConfig, x_shape: tuple, ctx: DistContext) -> str:
+    """Pick the expert strategy for this (config, shape, mesh)."""
+    want = ctx.moe_strategy if ctx.moe_strategy != "auto" else cfg.strategy
+    if want not in ("auto", "ep_shardmap"):
+        return want
+    if ctx.mesh is None:
+        return "tp_gspmd"
+    shape = dict(zip(ctx.mesh.axis_names, ctx.mesh.devices.shape))
+    P = shape.get(ctx.ep_axis, 1)
+    batch_div = 1
+    for a in ctx.batch_axes:
+        batch_div *= shape.get(a, 1)
+    B, S = x_shape[0], x_shape[1]
+    ok = (cfg.num_experts % P == 0 and B % batch_div == 0 and S % P == 0
+          and (B // batch_div) * (S // P) % ctx.moe_chunks == 0
+          and (B // batch_div) * (S // P) >= ctx.moe_chunks)
+    if ok:
+        return "ep_shardmap"
+    if want == "ep_shardmap":
+        raise ValueError(
+            f"ep_shardmap requested but E={cfg.num_experts}, B={B}, S={S} "
+            f"do not divide mesh axes {shape}")
+    return "tp_gspmd"
+
+
+# ---------------------------------------------------------------------------
+# tp_gspmd / local path: per-row dispatch, replicated experts, TP FFN
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_rows(params: dict, x: jax.Array, cfg: MoEConfig,
+                  ctx: DistContext):
+    B, S, d = x.shape
+    E, k = cfg.num_experts, cfg.top_k
+
+    def row_fn(xrow):
+        def chunk_fn(xc):
+            t_c = xc.shape[0]
+            r = route(params["router"], xc, cfg)
+            if cfg.capacity_mode == "dropless":
+                cap = dsp.dropless_capacity(t_c)
+            else:
+                cap = dsp.balanced_capacity(t_c, k, E, cfg.capacity_factor)
+            plan = dsp.make_plan(r.expert_idx, E, cap)
+            buf = dsp.scatter_rows(xc, plan, E, cap)
+            h = expert_ffn(buf, params["w1"], params["w3"], params["w2"],
+                           use_pallas=ctx.use_pallas)
+            y = dsp.gather_rows(h, plan, r.weights)
+            stats = {"aux_loss": r.aux_loss,
+                     "load": r.load.astype(jnp.float32),
+                     "drops": plan.drops.astype(jnp.float32)}
+            return y, stats
+
+        return chunked_map(chunk_fn, xrow, ctx.moe_chunks, remat=ctx.remat_chunks)
+
+    y, stats = jax.vmap(row_fn)(x)
+    stats = {
+        "aux_loss": stats["aux_loss"].mean() / ctx.moe_chunks,
+        "load": stats["load"].sum(0),
+        "drops": stats["drops"].sum(),
+    }
+    return y, stats
+
+
+# ---------------------------------------------------------------------------
+# dense oracle: compute every expert on every token (tests only)
+# ---------------------------------------------------------------------------
+
+def _moe_ffn_dense(params: dict, x: jax.Array, cfg: MoEConfig,
+                   ctx: DistContext):
+    B, S, d = x.shape
+    x2 = x.reshape(B * S, d)
+    r = route(params["router"], x2, cfg)
+    xe = jnp.broadcast_to(x2[None], (cfg.num_experts,) + x2.shape)
+    h = expert_ffn(xe, params["w1"], params["w3"], params["w2"],
+                   use_pallas=False)                       # (E, T, d)
+    onehot = jax.nn.one_hot(r.expert_idx, cfg.num_experts, dtype=h.dtype)
+    w = (onehot * r.weights[..., None].astype(h.dtype)).sum(1)   # (T, E)
+    y = jnp.einsum("te,etd->td", w, h)
+    stats = {"aux_loss": r.aux_loss, "load": r.load.astype(jnp.float32),
+             "drops": jnp.float32(0)}
+    return y.reshape(B, S, d), stats
+
+
+# ---------------------------------------------------------------------------
+# public layer
+# ---------------------------------------------------------------------------
+
+def _shared_expert(params: dict, x: jax.Array) -> jax.Array:
+    s = params["shared"]
+    h = jax.nn.silu(x @ s["w1"]) * (x @ s["w3"])
+    return h @ s["w2"]
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, ctx: DistContext):
+    """x: (B, S, d) -> (y, stats).  stats: aux_loss (scalar), load (E,), drops."""
+    strategy = resolve_strategy(cfg, x.shape, ctx)
+    if strategy == "ep_shardmap":
+        y, stats = moe_ffn_ep(params, x, cfg, ctx.mesh,
+                              batch_axes=ctx.batch_axes, ep_axis=ctx.ep_axis,
+                              chunks=ctx.moe_chunks, remat=ctx.remat_chunks,
+                              use_pallas=ctx.use_pallas,
+                              interpret=ctx.pallas_interpret,
+                              ragged=ctx.moe_ragged)
+        stats = dict(stats)
+        stats["aux_loss"] = stats["aux_loss"] / ctx.moe_chunks
+    elif strategy == "tp_gspmd":
+        y, stats = _moe_ffn_rows(params, x, cfg, ctx)
+    elif strategy == "dense":
+        y, stats = _moe_ffn_dense(params, x, cfg, ctx)
+    else:
+        raise ValueError(f"unknown MoE strategy {strategy!r}")
+    if "shared" in params:
+        y = y + _shared_expert(params, x)
+    return y, stats

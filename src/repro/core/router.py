@@ -1,0 +1,62 @@
+"""Top-k softmax router with the two balancing schemes the paper discusses:
+
+* Switch-style auxiliary load-balance loss (soft constraint), and
+* DeepSeek auxiliary-loss-free bias balancing (`loss_free_bias=True`): a
+  per-expert bias added to the routing *scores only* (selection), updated
+  outside the gradient path from observed loads.
+
+MemFine explicitly does NOT touch routing (that is its selling point), so the
+router here is deliberately standard; MemFine consumes its *load statistics*
+(max tokens per device, per layer) to drive MACT.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MoEConfig
+
+
+class RouterOut(NamedTuple):
+    expert_idx: jax.Array     # (T, K) int32 — chosen experts per token
+    weights: jax.Array        # (T, K) combine weights (renormalised probs)
+    aux_loss: jax.Array       # scalar — Switch-style auxiliary loss
+    load: jax.Array           # (E,) int32 — tokens routed to each expert
+
+
+def init_router(key: jax.Array, d_model: int, num_experts: int,
+                dtype=jnp.float32) -> dict:
+    w = jax.random.normal(key, (d_model, num_experts), dtype) * (d_model ** -0.5)
+    return {"w": w, "bias": jnp.zeros((num_experts,), jnp.float32)}
+
+
+def route(params: dict, x: jax.Array, cfg: MoEConfig) -> RouterOut:
+    """x: (T, d) -> top-k routing decisions.  Router math in fp32."""
+    logits = jnp.asarray(x, jnp.float32) @ jnp.asarray(params["w"], jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)                      # (T, E)
+    scores = probs + params["bias"][None, :] if cfg.loss_free_bias else probs
+    _, expert_idx = jax.lax.top_k(scores, cfg.top_k)             # (T, K)
+    gate = jnp.take_along_axis(probs, expert_idx, axis=-1)       # (T, K)
+    weights = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    E = cfg.num_experts
+    T = x.shape[0]
+    onehot = jax.nn.one_hot(expert_idx, E, dtype=jnp.float32)    # (T, K, E)
+    load = onehot.sum((0, 1)).astype(jnp.int32)                  # (E,)
+    # Switch aux loss: E * sum_e f_e * P_e
+    f = onehot.sum(1).mean(0)                                    # fraction dispatched
+    p_mean = probs.mean(0)
+    aux = E * jnp.sum(f * p_mean) * (1.0 / max(cfg.top_k, 1))
+    return RouterOut(expert_idx.astype(jnp.int32), weights.astype(x.dtype),
+                     aux.astype(jnp.float32), load)
+
+
+def update_bias(bias: jax.Array, load: jax.Array, cfg: MoEConfig) -> jax.Array:
+    """DeepSeek loss-free balancing: nudge under-loaded experts' bias up and
+    over-loaded experts' bias down.  Runs outside the gradient path."""
+    load = load.astype(jnp.float32)
+    err = load.mean() - load                                     # >0 if under-loaded
+    return bias + cfg.bias_update_rate * jnp.sign(err)

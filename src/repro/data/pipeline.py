@@ -1,0 +1,79 @@
+"""Deterministic synthetic LM data pipeline (host-side, numpy).
+
+Sequences follow a noisy affine-recurrence over the vocab (token_{t+1} =
+(a * token_t + b) mod V with epsilon-noise), so the LM loss has real signal
+and the end-to-end examples show it decreasing.  Batches are generated
+per-step from a counter-derived seed: fully deterministic, resumable from a
+checkpointed step, and shardable (each host could generate only its slice —
+here one host generates all and jax.device_put shards).
+
+Modality stubs (DESIGN.md carve-out): VLM patch embeddings and audio frame
+embeddings are deterministic pseudo-features of the right shape.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator
+
+import numpy as np
+
+from repro.configs.base import InputShape, ModelConfig
+
+
+@dataclass
+class SyntheticLMData:
+    cfg: ModelConfig
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    noise: float = 0.1
+
+    def batch_at(self, step: int) -> dict:
+        rng = np.random.default_rng((self.seed, step))
+        V = self.cfg.vocab_size
+        B = self.global_batch
+        S = self.seq_len
+        n_patch = self.cfg.num_patch_tokens
+        s_text = S - n_patch
+        a = 31 if V > 31 else 3
+        toks = np.empty((B, s_text + 1), np.int32)
+        toks[:, 0] = rng.integers(0, V, B)
+        noise_mask = rng.random((B, s_text)) < self.noise
+        noise_tok = rng.integers(0, V, (B, s_text))
+        for t in range(s_text):
+            nxt = (toks[:, t] * a + 7) % V
+            toks[:, t + 1] = np.where(noise_mask[:, t], noise_tok[:, t], nxt)
+        batch = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if n_patch:
+            batch["patches"] = rng.standard_normal(
+                (B, n_patch, self.cfg.d_model)).astype(np.float32)
+            # patch positions carry no LM loss
+            pad = np.full((B, n_patch), -1, np.int32)
+            batch["labels"] = np.concatenate([pad, batch["labels"]], axis=1)
+        if self.cfg.encoder_layers:
+            batch["frames"] = rng.standard_normal(
+                (B, self.cfg.encoder_seq, self.cfg.d_model)).astype(np.float32)
+        return batch
+
+    def __iter__(self) -> Iterator[dict]:
+        step = 0
+        while True:
+            yield self.batch_at(step)
+            step += 1
+
+
+def make_batch_specs(cfg: ModelConfig, shape: InputShape, dtype=np.float32) -> dict:
+    """Abstract train/prefill batch structure (shapes only) for the dry-run."""
+    import jax
+    B, S = shape.global_batch, shape.seq_len
+    n_patch = cfg.num_patch_tokens
+    specs = {
+        "tokens": jax.ShapeDtypeStruct((B, S - n_patch), np.int32),
+        "labels": jax.ShapeDtypeStruct((B, S), np.int32),
+    }
+    if n_patch:
+        specs["patches"] = jax.ShapeDtypeStruct((B, n_patch, cfg.d_model), dtype)
+    if cfg.encoder_layers:
+        specs["frames"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq, cfg.d_model), dtype)
+    return specs

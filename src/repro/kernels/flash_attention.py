@@ -1,0 +1,111 @@
+"""Flash attention — Pallas TPU kernel (beyond-paper prefill hot spot).
+
+Online-softmax blocked attention: grid (batch*heads, Sq/bq, Skv/bk) with the
+KV loop innermost; the (bq, hd) output tile plus running max/denominator live
+in VMEM scratch across KV steps.  Causal runs skip fully-masked KV blocks via
+``pl.when`` (the jnp path gets the same effect from its triangular python
+loop); ``window`` masks a sliding band (mixtral SWA / gemma3 local layers).
+
+Validated in interpret mode against models/attention.py's blocked-jnp path
+(itself validated against a naive oracle in tests/test_models.py).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc, m_s, l_s, *,
+                  n_kv: int, bq: int, bk: int, causal: bool, window: int,
+                  scale: float):
+    i = pl.program_id(1)          # query block
+    j = pl.program_id(2)          # kv block
+
+    @pl.when(j == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+        m_s[...] = jnp.full_like(m_s, NEG_INF)
+        l_s[...] = jnp.zeros_like(l_s)
+
+    q_start = i * bq
+    kv_start = j * bk
+    # a kv block is live unless entirely in the causal future or entirely
+    # past the sliding window
+    live = True
+    if causal:
+        live = kv_start <= q_start + bq - 1
+    if window:
+        live = jnp.logical_and(live, kv_start + bk - 1 > q_start - window)
+
+    @pl.when(live)
+    def _block():
+        q = q_ref[0].astype(jnp.float32)
+        k = k_ref[0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        qpos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        kpos = kv_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask = kpos <= qpos
+        if window:
+            mask = jnp.logical_and(mask, kpos > qpos - window)
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_s[...]
+        m_new = jnp.maximum(m_prev, s.max(axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        alpha = jnp.exp(m_prev - m_new)
+        l_s[...] = l_s[...] * alpha + p.sum(axis=1, keepdims=True)
+        acc[...] = acc[...] * alpha + jnp.dot(
+            p, v_ref[0].astype(jnp.float32),
+            preferred_element_type=jnp.float32)
+        m_s[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _epilogue():
+        o_ref[0] = (acc[...] / jnp.maximum(l_s[...], 1e-30)).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    block_q: int = 512, block_kv: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q, k, v: (BH, S, hd) — heads folded into the leading dim; KV already
+    repeated to the query head count.  Returns (BH, S, hd)."""
+    BH, S, hd = q.shape
+    Skv = k.shape[1]
+    bq = min(block_q, S)
+    bk = min(block_kv, Skv)
+    while S % bq:
+        bq //= 2
+    while Skv % bk:
+        bk //= 2
+    n_kv = Skv // bk
+    grid = (BH, S // bq, n_kv)
+    kernel = functools.partial(_flash_kernel, n_kv=n_kv, bq=bq, bk=bk,
+                               causal=causal, window=window,
+                               scale=hd ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, hd), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, hd), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

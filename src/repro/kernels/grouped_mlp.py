@@ -1,0 +1,109 @@
+"""Pallas TPU kernels: grouped (per-expert) blocked matmul and fused SwiGLU.
+
+TPU adaptation of the expert-FFN hot spot (DESIGN.md §6): the dispatched
+buffer (E, C, d) is contracted against stacked expert weights with a
+(E, C/bm, N/bn, K/bk) grid.  The K loop is innermost so the (bm, bn) output
+tile stays resident in VMEM (revisited across k steps) and accumulates in
+fp32 scratch; tiles are MXU-aligned multiples of 128 where shapes allow.
+
+On this CPU container the kernels are validated with ``interpret=True``
+against ``ref.py`` (Pallas does not lower to the CPU backend otherwise);
+``ops.py`` selects the jnp reference path for CPU / dry-run executions.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref, acc, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    acc[...] += jnp.dot(x_ref[0], w_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[0] = acc[...].astype(o_ref.dtype)
+
+
+def _swiglu_kernel(x_ref, w1_ref, w3_ref, o_ref, acc1, acc3, *, n_k: int):
+    k = pl.program_id(3)
+
+    @pl.when(k == 0)
+    def _init():
+        acc1[...] = jnp.zeros_like(acc1)
+        acc3[...] = jnp.zeros_like(acc3)
+
+    acc1[...] += jnp.dot(x_ref[0], w1_ref[0], preferred_element_type=jnp.float32)
+    acc3[...] += jnp.dot(x_ref[0], w3_ref[0], preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[0] = (jax.nn.silu(acc1[...]) * acc3[...]).astype(o_ref.dtype)
+
+
+def _pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (MXU likes 128s)."""
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return max(b, 1)
+
+
+def grouped_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 128,
+                   block_n: int = 128, block_k: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """x: (E, M, K) @ w: (E, K, N) -> (E, M, N), one expert per grid row."""
+    E, M, K = x.shape
+    _, _, N = w.shape
+    bm, bn, bk = _pick_block(M, block_m), _pick_block(N, block_n), _pick_block(K, block_k)
+    n_k = K // bk
+    grid = (E, M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(x, w)
+
+
+def grouped_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array, *,
+                   block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                   interpret: bool = False) -> jax.Array:
+    """Fused silu(x@w1) * (x@w3) per expert: (E, M, K) -> (E, M, N)."""
+    E, M, K = x.shape
+    _, _, N = w1.shape
+    bm, bn, bk = _pick_block(M, block_m), _pick_block(N, block_n), _pick_block(K, block_k)
+    n_k = K // bk
+    grid = (E, M // bm, N // bn, n_k)
+    return pl.pallas_call(
+        functools.partial(_swiglu_kernel, n_k=n_k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bm, bk), lambda e, i, j, k: (e, i, k)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+            pl.BlockSpec((1, bk, bn), lambda e, i, j, k: (e, k, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bm, bn), lambda e, i, j, k: (e, i, j)),
+        out_shape=jax.ShapeDtypeStruct((E, M, N), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bn), jnp.float32),
+            pltpu.VMEM((bm, bn), jnp.float32),
+        ],
+        interpret=interpret,
+    )(x, w1, w3)

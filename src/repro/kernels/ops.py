@@ -1,0 +1,122 @@
+"""Jit-friendly wrappers that select the Pallas kernel or the jnp reference.
+
+``use_pallas`` defaults to False because this container (and the dry-run) runs
+on the CPU backend, where Pallas only executes in interpret mode.  On a real
+TPU deployment the launchers pass ``use_pallas=True``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels import ref
+from repro.kernels.grouped_mlp import grouped_matmul, grouped_swiglu
+from repro.kernels.ragged_mlp import ragged_matmul, ragged_swiglu
+
+
+def expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, *,
+               use_pallas: bool = False, interpret: bool = False) -> jax.Array:
+    """Per-expert SwiGLU FFN over dispatched buffers.
+
+    x: (..., E, C, d); w1, w3: (E, d, f); w2: (E, f, d) -> (..., E, C, d).
+    Leading batch dims are vmapped over for the kernel path.
+    """
+    if not use_pallas:
+        return ref.expert_ffn_ref(x, w1, w3, w2)
+
+    def one(xb):
+        h = grouped_swiglu(xb, w1, w3, interpret=interpret)
+        return grouped_matmul(h, w2, interpret=interpret)
+
+    fn = one
+    for _ in range(x.ndim - 3):
+        fn = jax.vmap(fn)
+    return fn(x)
+
+
+def _segment_outer(a: jax.Array, b: jax.Array, b2e: jax.Array,
+                   num_experts: int) -> jax.Array:
+    """Per-expert sum of block outer products: dw[e] = sum_{blocks of e}
+    a_block^T @ b_block.  A scan over blocks — never materialises a
+    (n_blocks, d, f) tensor (the weight-gather trap of the jnp fallback)."""
+    nb = b2e.shape[0]
+    R = a.shape[0]
+    ab = a.reshape(nb, R // nb, a.shape[1])
+    bb = b.reshape(nb, R // nb, b.shape[1])
+    acc0 = jnp.zeros((num_experts, a.shape[1], b.shape[1]), jnp.float32)
+
+    def body(acc, inp):
+        ai, bi, e = inp
+        contrib = jnp.dot(ai.T, bi, preferred_element_type=jnp.float32)
+        return acc.at[e].add(contrib), None
+
+    acc, _ = jax.lax.scan(body, acc0, (ab, bb, b2e))
+    return acc
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(6, 7))
+def _ragged_ffn_kernel(x, w1, w3, w2, b2e, rows, block_m, interpret):
+    h = ragged_swiglu(x, w1, w3, b2e, rows, block_m=block_m,
+                      interpret=interpret)
+    return ragged_matmul(h, w2, b2e, rows, block_m=block_m,
+                         interpret=interpret)
+
+
+def _ragged_ffn_fwd(x, w1, w3, w2, b2e, rows, block_m, interpret):
+    y = _ragged_ffn_kernel(x, w1, w3, w2, b2e, rows, block_m, interpret)
+    return y, (x, w1, w3, w2, b2e, rows)
+
+
+def _ragged_ffn_bwd(block_m, interpret, res, gy):
+    x, w1, w3, w2, b2e, rows = res
+    E = w1.shape[0]
+    mm = functools.partial(ragged_matmul, block_to_expert=b2e,
+                           total_rows=rows, block_m=block_m,
+                           interpret=interpret)
+    # recompute the two up-projections (chunk-recompute discipline: no (R, f)
+    # residuals are ever stored)
+    h1 = mm(x, w1).astype(jnp.float32)
+    h3 = mm(x, w3).astype(jnp.float32)
+    s = jax.nn.sigmoid(h1)
+    silu_h1 = h1 * s
+    a = (silu_h1 * h3).astype(x.dtype)
+    da = mm(gy, jnp.swapaxes(w2, 1, 2)).astype(jnp.float32)
+    dh3 = (da * silu_h1).astype(x.dtype)
+    dh1 = (da * h3 * (s + silu_h1 * (1 - s))).astype(x.dtype)
+    dx = (mm(dh1, jnp.swapaxes(w1, 1, 2))
+          + mm(dh3, jnp.swapaxes(w3, 1, 2))).astype(x.dtype)
+    dw1 = _segment_outer(x, dh1, b2e, E).astype(w1.dtype)
+    dw3 = _segment_outer(x, dh3, b2e, E).astype(w3.dtype)
+    dw2 = _segment_outer(a, gy, b2e, E).astype(w2.dtype)
+    f0 = lambda v: np.zeros(v.shape, jax.dtypes.float0)
+    return dx, dw1, dw3, dw2, f0(b2e), f0(rows)
+
+
+_ragged_ffn_kernel.defvjp(_ragged_ffn_fwd, _ragged_ffn_bwd)
+
+
+def ragged_expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                      w2: jax.Array, block_to_expert: jax.Array,
+                      total_rows, *, block_m: int = 128,
+                      use_pallas: bool = False,
+                      interpret: bool = False) -> jax.Array:
+    """SwiGLU FFN over the MegaBlocks-style flat layout (kernels/ragged_mlp).
+
+    x: (R, d) expert-grouped bm-aligned rows -> (R, d).  On TPU the kernel
+    predicates off blocks past ``total_rows``, so issued MXU work scales with
+    the ACTUAL routed load instead of the dropless worst case.  The Pallas
+    path carries a custom VJP (pallas_call has no autodiff rule): backward
+    recomputes the up-projections with the same kernels and accumulates
+    weight grads with a per-block scan.
+    """
+    if not use_pallas:
+        return ref.ragged_expert_ffn_ref(x, w1, w3, w2, block_to_expert,
+                                         total_rows)
+    rows = jnp.asarray(total_rows, jnp.int32)
+    return _ragged_ffn_kernel(x, w1, w3, w2,
+                              block_to_expert.astype(jnp.int32), rows,
+                              block_m, interpret)

@@ -1,0 +1,141 @@
+"""Ragged (MegaBlocks-style) grouped expert matmul — Pallas TPU kernel.
+
+The dropless per-expert buffer layout computes every CAPACITY slot: with the
+theoretical-worst capacity MemFine requires, that is E_local/k more FLOPs
+than the tokens actually routed (2x on DeepSeek-V3 shapes, 4x on Mixtral).
+This kernel computes a *flat* row buffer sorted by expert, with each
+expert's rows padded to the block size so every (bm)-row block belongs to
+exactly one expert:
+
+  x:       (R, K)  rows grouped by expert, bm-aligned groups
+  w:       (E, K, N) stacked expert weights
+  b2e:     (R//bm,) int32 — scalar-prefetched block -> expert map
+  rows:    (1,) int32 — total occupied rows; blocks past it are skipped
+           (predicated off), so issued MXU work scales with the ACTUAL load,
+           not the worst case.
+
+Validated in interpret mode against ref.py; on CPU/dry-run executions the
+MoE layer keeps the einsum path (Pallas does not lower to the CPU backend).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ragged_kernel(b2e_ref, rows_ref, x_ref, w_ref, o_ref, acc, *, n_k: int):
+    k = pl.program_id(2)
+    bm = x_ref.shape[0]
+    live = pl.program_id(0) * bm < rows_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        acc[...] = jnp.zeros_like(acc)
+
+    @pl.when(live)
+    def _compute():
+        acc[...] += jnp.dot(x_ref[...], w_ref[0],
+                            preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = acc[...].astype(o_ref.dtype)
+
+
+def _ragged_swiglu_kernel(b2e_ref, rows_ref, x_ref, w1_ref, w3_ref, o_ref,
+                          acc1, acc3, *, n_k: int):
+    k = pl.program_id(2)
+    bm = x_ref.shape[0]
+    live = pl.program_id(0) * bm < rows_ref[0]
+
+    @pl.when(k == 0)
+    def _init():
+        acc1[...] = jnp.zeros_like(acc1)
+        acc3[...] = jnp.zeros_like(acc3)
+
+    @pl.when(live)
+    def _compute():
+        acc1[...] += jnp.dot(x_ref[...], w1_ref[0],
+                             preferred_element_type=jnp.float32)
+        acc3[...] += jnp.dot(x_ref[...], w3_ref[0],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(k == n_k - 1)
+    def _epilogue():
+        o_ref[...] = (jax.nn.silu(acc1[...]) * acc3[...]).astype(o_ref.dtype)
+
+
+def _blocks(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return max(b, 1)
+
+
+def ragged_matmul(x: jax.Array, w: jax.Array, block_to_expert: jax.Array,
+                  total_rows: jax.Array, *, block_m: int = 128,
+                  block_n: int = 128, block_k: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """x: (R, K) bm-aligned expert-grouped rows; w: (E, K, N) -> (R, N)."""
+    R, K = x.shape
+    E, _, N = w.shape
+    bm = block_m
+    assert R % bm == 0 and block_to_expert.shape == (R // bm,)
+    bn, bk = _blocks(N, block_n), _blocks(K, block_k)
+    n_k = K // bk
+    grid = (R // bm, N // bn, n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, b2e, rows: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, b2e, rows: (b2e[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, b2e, rows: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, N), x.dtype),
+        interpret=interpret,
+    )(block_to_expert.astype(jnp.int32),
+      jnp.asarray(total_rows, jnp.int32).reshape(1), x, w)
+
+
+def ragged_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                  block_to_expert: jax.Array, total_rows: jax.Array, *,
+                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                  interpret: bool = False) -> jax.Array:
+    """Fused silu(x@w1)*(x@w3) over the ragged layout: (R, K) -> (R, N)."""
+    R, K = x.shape
+    E, _, N = w1.shape
+    bm = block_m
+    assert R % bm == 0 and block_to_expert.shape == (R // bm,)
+    bn, bk = _blocks(N, block_n), _blocks(K, block_k)
+    n_k = K // bk
+    grid = (R // bm, N // bn, n_k)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, k, b2e, rows: (i, k)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, b2e, rows: (b2e[i], k, j)),
+            pl.BlockSpec((1, bk, bn), lambda i, j, k, b2e, rows: (b2e[i], k, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, b2e, rows: (i, j)),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
+                        pltpu.VMEM((bm, bn), jnp.float32)],
+    )
+    return pl.pallas_call(
+        functools.partial(_ragged_swiglu_kernel, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, N), x.dtype),
+        interpret=interpret,
+    )(block_to_expert.astype(jnp.int32),
+      jnp.asarray(total_rows, jnp.int32).reshape(1), x, w1, w3)

@@ -1,0 +1,74 @@
+"""Pure-jnp oracles for the Pallas kernels (and the CPU/dry-run compute path).
+
+The grouped expert FFN is the compute hot spot MemFine schedules around:
+dispatched buffers (E, C, d) hit per-expert SwiGLU FFNs (E, d, f)/(E, f, d).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def grouped_matmul_ref(x: jax.Array, w: jax.Array) -> jax.Array:
+    """x: (..., E, M, K), w: (E, K, N) -> (..., E, M, N)."""
+    return jnp.einsum("...emk,ekn->...emn", x, w,
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def grouped_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array) -> jax.Array:
+    """silu(x @ w1) * (x @ w3), per expert group."""
+    a = jnp.einsum("...emk,ekn->...emn", x, w1, preferred_element_type=jnp.float32)
+    b = jnp.einsum("...emk,ekn->...emn", x, w3, preferred_element_type=jnp.float32)
+    return (jax.nn.silu(a) * b).astype(x.dtype)
+
+
+def expert_ffn_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                   w2: jax.Array) -> jax.Array:
+    """Full per-expert SwiGLU FFN: (..., E, C, d) -> (..., E, C, d)."""
+    h = grouped_swiglu_ref(x, w1, w3)
+    return grouped_matmul_ref(h, w2)
+
+
+# ---------------------------------------------------------------------------
+# ragged (flat expert-grouped rows) layout — oracle for kernels/ragged_mlp.py
+# ---------------------------------------------------------------------------
+
+def _blocked(x: jax.Array, block_to_expert: jax.Array):
+    R = x.shape[0]
+    nb = block_to_expert.shape[0]
+    return x.reshape(nb, R // nb, x.shape[1])
+
+
+def ragged_matmul_ref(x: jax.Array, w: jax.Array, block_to_expert: jax.Array,
+                      total_rows) -> jax.Array:
+    """x: (R, K) expert-grouped rows -> (R, N); rows past total_rows are 0.
+    Blocked formulation: weights gathered per bm-row block (one expert per
+    block by construction), so the gather is (nb, K, N), never (R, K, N)."""
+    R, K = x.shape
+    xb = _blocked(x, block_to_expert)                            # (nb, bm, K)
+    wb = jnp.take(w, block_to_expert, axis=0)                    # (nb, K, N)
+    out = jnp.einsum("bmk,bkn->bmn", xb, wb,
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    out = out.reshape(R, -1)
+    live = jnp.arange(R) < jnp.asarray(total_rows)
+    return jnp.where(live[:, None], out, 0)
+
+
+def ragged_swiglu_ref(x: jax.Array, w1: jax.Array, w3: jax.Array,
+                      block_to_expert: jax.Array, total_rows) -> jax.Array:
+    R, K = x.shape
+    xb = _blocked(x, block_to_expert)
+    a = jnp.einsum("bmk,bkn->bmn", xb, jnp.take(w1, block_to_expert, axis=0),
+                   preferred_element_type=jnp.float32)
+    b = jnp.einsum("bmk,bkn->bmn", xb, jnp.take(w3, block_to_expert, axis=0),
+                   preferred_element_type=jnp.float32)
+    out = (jax.nn.silu(a) * b).astype(x.dtype).reshape(R, -1)
+    live = jnp.arange(R) < jnp.asarray(total_rows)
+    return jnp.where(live[:, None], out, 0)
+
+
+def ragged_expert_ffn_ref(x: jax.Array, w1, w3, w2, block_to_expert,
+                          total_rows) -> jax.Array:
+    h = ragged_swiglu_ref(x, w1, w3, block_to_expert, total_rows)
+    return ragged_matmul_ref(h, w2, block_to_expert, total_rows)

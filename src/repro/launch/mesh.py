@@ -1,0 +1,34 @@
+"""Production meshes.  A FUNCTION (not a module-level constant) so importing
+this module never touches jax device state — the dry-run sets
+XLA_FLAGS=--xla_force_host_platform_device_count=512 before first jax init.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: 256 chips (16, 16) ("data", "model").
+    Multi-pod: 2 pods = 512 chips (2, 16, 16) ("pod", "data", "model") —
+    "pod" is an outer data-parallel axis crossing the inter-pod links."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = 1
+    for s in shape:
+        n *= s
+    devices = jax.devices()[:n]
+    if len(devices) < n:
+        raise RuntimeError(
+            f"mesh {shape} needs {n} devices, have {len(devices)} — run under "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count=512 (dryrun.py "
+            f"sets this itself)")
+    import numpy as np
+    return jax.sharding.Mesh(np.asarray(devices).reshape(shape), axes)
+
+
+def make_host_mesh(shape=(2, 2), axes=("data", "model")):
+    """Small mesh over whatever local devices exist (tests)."""
+    import numpy as np
+    n = int(np.prod(shape))
+    return jax.sharding.Mesh(np.asarray(jax.devices()[:n]).reshape(shape), axes)

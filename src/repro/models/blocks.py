@@ -1,0 +1,243 @@
+"""One transformer layer: mixer (attention | mamba) + FFN (dense | MoE | none).
+
+Remat policy (DESIGN.md §2):
+  * "none"    — store everything (m_g copies in the memory model).
+  * "full"    — jax.checkpoint around the whole layer = Megatron full
+                recomputation (paper Method 1 when moe_chunks=1).
+  * "memfine" — same layer checkpoint, but the MoE inside additionally
+                chunk-recomputes (Eq. 7); selected via ctx.moe_chunks > 1
+                with remat_chunks=True.  Nested checkpoints compose: during
+                a layer's backward, only ONE chunk's dispatch buffers live.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.moe import DistContext, init_moe, moe_ffn
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention, decode_attention
+from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
+                                 init_attention, init_mlp, init_norm)
+
+
+def zero_stats(cfg: ModelConfig) -> dict:
+    E = cfg.moe.num_experts if cfg.moe else 1
+    return {"aux_loss": jnp.float32(0), "load": jnp.zeros((E,), jnp.float32),
+            "drops": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_layer(key: jax.Array, spec: LayerSpec, cfg: ModelConfig,
+               cross_attention: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p: dict = {"norm1": init_norm(cfg.d_model, cfg.norm)}
+    if spec.mixer == "attn":
+        p["mixer"] = init_attention(ks[0], cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim,
+                                    qk_norm=spec.attn.qk_norm, dtype=dtype)
+    else:
+        p["mixer"] = ssm_mod.init_ssm(ks[0], cfg.d_model, spec.ssm, dtype)
+    if cross_attention:
+        p["norm_x"] = init_norm(cfg.d_model, cfg.norm)
+        p["cross"] = init_attention(ks[3], cfg.d_model, cfg.num_heads,
+                                    cfg.num_kv_heads, cfg.resolved_head_dim,
+                                    dtype=dtype)
+    if spec.ffn != "none":
+        p["norm2"] = init_norm(cfg.d_model, cfg.norm)
+        if spec.ffn == "dense":
+            p["ffn"] = init_mlp(ks[1], cfg.d_model, cfg.d_ff, dtype)
+        else:
+            p["ffn"] = init_moe(ks[1], cfg.d_model, cfg.moe, dtype)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# attention mixer (train/prefill and decode)
+# ---------------------------------------------------------------------------
+
+def _hconstrain(x: jax.Array, ctx: DistContext) -> jax.Array:
+    """Pin (B, S, H, hd) tensors to head sharding — GSPMD cannot derive it
+    through the (KH, G) reshape/repeat and otherwise replicates the score
+    tensors (observed 34 GB/device in the dry-run).  Uneven H pads."""
+    if ctx.heads_pspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, ctx.heads_pspec)
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+         positions: jax.Array, ctx: DistContext):
+    from repro.models.attention import repeat_kv
+    B, S, _ = x.shape
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (x @ p["wk"]).reshape(B, S, KH, hd)
+    v = (x @ p["wv"]).reshape(B, S, KH, hd)
+    if "q_norm" in p:
+        q = apply_norm(p["q_norm"], q)
+        k = apply_norm(p["k_norm"], k)
+    if spec.attn.rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if S > 1:  # train/prefill: repeat KV to H so every score dim shards
+        k = repeat_kv(k, H)
+        v = repeat_kv(v, H)
+        q, k, v = _hconstrain(q, ctx), _hconstrain(k, ctx), _hconstrain(v, ctx)
+        # named for the "selective" remat policy: saving these avoids
+        # re-running the sequence-parallel all-gathers during recompute
+        q = checkpoint_name(q, "qkv")
+        k = checkpoint_name(k, "qkv")
+        v = checkpoint_name(v, "qkv")
+    return q, k, v
+
+
+def attn_mixer(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+               positions: jax.Array, ctx: DistContext,
+               causal: bool = True) -> jax.Array:
+    q, k, v = _qkv(p, x, cfg, spec, positions, ctx)
+    out = attention(q, k, v, spec.attn, causal=causal)
+    B, S = x.shape[:2]
+    return out.reshape(B, S, -1) @ p["wo"]
+
+
+def cache_len(spec: LayerSpec, seq_len: int) -> int:
+    if spec.attn.kind in ("window", "chunked") and spec.attn.window:
+        return min(spec.attn.window, seq_len)
+    return seq_len
+
+
+def attn_mixer_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
+                      cfg: ModelConfig, spec: LayerSpec, ctx: DistContext):
+    """x: (B, 1, d).  cache: {"k","v"}: (B, Sc, KH, hd).  pos: scalar int."""
+    B = x.shape[0]
+    q, k, v = _qkv(p, x, cfg, spec, pos[None, None].astype(jnp.int32)
+                   * jnp.ones((B, 1), jnp.int32), ctx)
+    Sc = cache["k"].shape[1]
+    if spec.attn.kind == "window" and spec.attn.window and Sc == spec.attn.window:
+        write = pos % Sc
+        length = jnp.minimum(pos + 1, Sc) * jnp.ones((B,), jnp.int32)
+    elif spec.attn.kind == "chunked" and spec.attn.window and Sc == spec.attn.window:
+        write = pos % Sc
+        length = (pos % Sc + 1) * jnp.ones((B,), jnp.int32)   # chunk-local context
+    else:
+        write = pos
+        length = (pos + 1) * jnp.ones((B,), jnp.int32)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache["k"], k, write, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache["v"], v, write, axis=1)
+    out = decode_attention(q, k_cache, v_cache, length, spec.attn)
+    y = out.reshape(B, 1, -1) @ p["wo"]
+    return y, {"k": k_cache, "v": v_cache}
+
+
+# ---------------------------------------------------------------------------
+# whole layer
+# ---------------------------------------------------------------------------
+
+def apply_layer(params: dict, x: jax.Array, spec: LayerSpec, cfg: ModelConfig,
+                ctx: DistContext, positions: jax.Array, *,
+                causal: bool = True, enc_out: Optional[jax.Array] = None):
+    """Train/prefill.  Returns (x, stats)."""
+
+    def layer_fn(x):
+        h = apply_norm(params["norm1"], x, cfg.norm)
+        if spec.mixer == "attn":
+            h = attn_mixer(params["mixer"], h, cfg, spec, positions, ctx, causal)
+        else:
+            h = ssm_mod.apply_ssm(params["mixer"], h, spec.ssm)
+        x = x + h
+        if "cross" in params and enc_out is not None:
+            h = apply_norm(params["norm_x"], x, cfg.norm)
+            q, k, v = _cross_qkv(params["cross"], h, enc_out, cfg)
+            o = attention(q, k, v, spec.attn, causal=False)
+            x = x + o.reshape(*x.shape[:2], -1) @ params["cross"]["wo"]
+        stats = zero_stats(cfg)
+        if spec.ffn != "none":
+            h = apply_norm(params["norm2"], x, cfg.norm)
+            if spec.ffn == "dense":
+                h = apply_mlp(params["ffn"], h)
+            else:
+                h, stats = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+            x = x + h
+        return x, stats
+
+    if cfg.remat_policy in ("full", "memfine"):
+        layer_fn = jax.checkpoint(layer_fn)
+    elif cfg.remat_policy == "selective":
+        # keep the all-gathered qkv tensors resident: recompute skips the
+        # sequence-parallel gathers (collective term down, memory term up)
+        layer_fn = jax.checkpoint(
+            layer_fn,
+            policy=jax.checkpoint_policies.save_only_these_names("qkv"))
+    return layer_fn(x)
+
+
+def _cross_qkv(p: dict, x: jax.Array, enc_out: jax.Array, cfg: ModelConfig):
+    B, S, _ = x.shape
+    Se = enc_out.shape[1]
+    H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = (x @ p["wq"]).reshape(B, S, H, hd)
+    k = (enc_out @ p["wk"]).reshape(B, Se, KH, hd)
+    v = (enc_out @ p["wv"]).reshape(B, Se, KH, hd)
+    return q, k, v
+
+
+def apply_layer_decode(params: dict, x: jax.Array, cache, spec: LayerSpec,
+                       cfg: ModelConfig, ctx: DistContext, pos: jax.Array):
+    """Single-token decode.  cache: layer cache pytree.  Returns (x, cache)."""
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        h, new_attn = attn_mixer_decode(params["mixer"], h, cache["attn"], pos,
+                                        cfg, spec, ctx)
+        cache = {**cache, "attn": new_attn}
+    else:
+        h, new_state = ssm_mod.decode_ssm(params["mixer"], h,
+                                          ssm_mod.SSMState(**cache["ssm"]),
+                                          spec.ssm)
+        cache = {**cache, "ssm": new_state._asdict()}
+    x = x + h
+    if "cross" in params and "cross_k" in cache:
+        h = apply_norm(params["norm_x"], x, cfg.norm)
+        B = x.shape[0]
+        H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+        q = (h @ params["cross"]["wq"]).reshape(B, 1, H, hd)
+        Se = cache["cross_k"].shape[1]
+        o = decode_attention(q, cache["cross_k"], cache["cross_v"],
+                             Se * jnp.ones((B,), jnp.int32), spec.attn)
+        x = x + o.reshape(B, 1, -1) @ params["cross"]["wo"]
+    if spec.ffn != "none":
+        h = apply_norm(params["norm2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            h = apply_mlp(params["ffn"], h)
+        else:
+            h, _ = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+        x = x + h
+    return x, cache
+
+
+def init_layer_cache(spec: LayerSpec, cfg: ModelConfig, batch: int,
+                     seq_len: int, dtype, enc_out: Optional[jax.Array] = None,
+                     cross_params: Optional[dict] = None) -> dict:
+    """Decode cache for one layer (static shapes; window layers ring-bounded)."""
+    cache: dict = {}
+    if spec.mixer == "attn":
+        Sc = cache_len(spec, seq_len)
+        KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        cache["attn"] = {"k": jnp.zeros((batch, Sc, KH, hd), dtype),
+                         "v": jnp.zeros((batch, Sc, KH, hd), dtype)}
+    else:
+        cache["ssm"] = ssm_mod.init_state(batch, cfg.d_model, spec.ssm,
+                                          dtype)._asdict()
+    if cross_params is not None and enc_out is not None:
+        KH, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+        Se = enc_out.shape[1]
+        cache["cross_k"] = (enc_out @ cross_params["wk"]).reshape(batch, Se, KH, hd)
+        cache["cross_v"] = (enc_out @ cross_params["wv"]).reshape(batch, Se, KH, hd)
+    return cache

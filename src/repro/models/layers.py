@@ -1,0 +1,88 @@
+"""Shared layer primitives: norms, RoPE, projections, dense SwiGLU MLP."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def init_norm(d: int, kind: str = "rmsnorm") -> dict:
+    p = {"scale": jnp.ones((d,), jnp.float32)}
+    if kind == "layernorm":
+        p["bias"] = jnp.zeros((d,), jnp.float32)
+    return p
+
+
+def apply_norm(params: dict, x: jax.Array, kind: str = "rmsnorm",
+               eps: float = 1e-6) -> jax.Array:
+    xf = x.astype(jnp.float32)
+    if kind == "rmsnorm":
+        y = xf * jax.lax.rsqrt(jnp.mean(xf * xf, -1, keepdims=True) + eps)
+    else:
+        mu = xf.mean(-1, keepdims=True)
+        var = ((xf - mu) ** 2).mean(-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    y = y * params["scale"]
+    if "bias" in params:
+        y = y + params["bias"]
+    return y.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: (..., S) int."""
+    hd = x.shape[-1]
+    freqs = rope_freqs(hd, theta)                                 # (hd/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # (..., S, hd/2)
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# projections / MLP
+# ---------------------------------------------------------------------------
+
+def init_linear(key: jax.Array, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, (d_in, d_out), dtype) * (d_in ** -0.5)
+
+
+def init_attention(key: jax.Array, d: int, heads: int, kv_heads: int, hd: int,
+                   qk_norm: bool = False, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": init_linear(ks[0], d, heads * hd, dtype),
+        "wk": init_linear(ks[1], d, kv_heads * hd, dtype),
+        "wv": init_linear(ks[2], d, kv_heads * hd, dtype),
+        "wo": init_linear(ks[3], heads * hd, d, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = init_norm(hd)
+        p["k_norm"] = init_norm(hd)
+    return p
+
+
+def init_mlp(key: jax.Array, d: int, d_ff: int, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w1": init_linear(ks[0], d, d_ff, dtype),
+        "w3": init_linear(ks[1], d, d_ff, dtype),
+        "w2": init_linear(ks[2], d_ff, d, dtype),
+    }
+
+
+def apply_mlp(params: dict, x: jax.Array) -> jax.Array:
+    h = jax.nn.silu(x @ params["w1"]) * (x @ params["w3"])
+    return h @ params["w2"]

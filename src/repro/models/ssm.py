@@ -1,0 +1,180 @@
+"""Mamba-2 (SSD, state-space duality) mixer — arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: quadratic attention-like
+compute *within* length-``chunk`` blocks plus a linear inter-chunk state
+recurrence (lax.scan), i.e. sub-quadratic overall — which is what makes
+mamba2/jamba eligible for the long_500k shape.  Decode is the constant-size
+recurrent step on a (H, P, N) state plus a width-(w-1) conv tail.
+
+Single B/C group (G=1), scalar A per head, following the 130m reference.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SSMSpec
+from repro.models.layers import apply_norm, init_linear, init_norm
+
+
+class SSMState(NamedTuple):
+    ssm: jax.Array       # (B, H, P, N) recurrent state
+    conv: jax.Array      # (B, w-1, d_conv) conv tail
+
+
+def dims(d_model: int, spec: SSMSpec):
+    d_in = spec.expand * d_model
+    heads = d_in // spec.head_dim
+    d_conv = d_in + 2 * spec.state_dim
+    return d_in, heads, d_conv
+
+
+def init_ssm(key: jax.Array, d_model: int, spec: SSMSpec, dtype=jnp.float32) -> dict:
+    d_in, heads, d_conv = dims(d_model, spec)
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": init_linear(ks[0], d_model, 2 * d_in + 2 * spec.state_dim + heads, dtype),
+        "conv_w": jax.random.normal(ks[1], (spec.conv_width, d_conv), dtype) * 0.1,
+        "conv_b": jnp.zeros((d_conv,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, heads).astype(jnp.float32)),
+        "D": jnp.ones((heads,), jnp.float32),
+        "dt_bias": jnp.zeros((heads,), jnp.float32),
+        "norm": init_norm(d_in),
+        "out_proj": init_linear(ks[2], d_in, d_model, dtype),
+    }
+
+
+def _causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                 tail: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv.  x: (B, T, C), w: (K, C).  ``tail``: (B, K-1, C)
+    prepended history (decode); zeros for training."""
+    K = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], K - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([tail, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(K))
+    return jax.nn.silu(out + b)
+
+
+def _segsum(dA: jax.Array) -> jax.Array:
+    """dA: (..., L, H) -> (..., H, L, L) with s[i, j] = sum_{j<k<=i} dA_k
+    (lower-triangular; -inf above the diagonal)."""
+    L = dA.shape[-2]
+    cs = jnp.cumsum(dA, axis=-2)                                  # (..., L, H)
+    csh = jnp.moveaxis(cs, -1, -2)                                # (..., H, L)
+    s = csh[..., :, None] - csh[..., None, :]                     # (..., H, L, L)
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask, s, -jnp.inf)
+
+
+def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
+             C: jax.Array, chunk: int, initial_state: jax.Array | None = None):
+    """Chunked SSD.  x: (b, T, H, P); dt: (b, T, H); A: (H,) negative;
+    B, C: (b, T, N).  Returns (y: (b, T, H, P), final_state: (b, H, P, N))."""
+    b, T, H, Pd = x.shape
+    N = B.shape[-1]
+    T0 = T
+    if T % chunk:                                                 # pad: dt=0 -> no-op steps
+        pad = chunk - T % chunk
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+        T = T + pad
+    nc, cl = T // chunk, chunk
+    xd = x * dt[..., None]                                        # dt-weighted input
+    dA = dt * A                                                   # (b, T, H)
+
+    xc = xd.reshape(b, nc, cl, H, Pd)
+    dAc = dA.reshape(b, nc, cl, H)
+    Bc = B.reshape(b, nc, cl, N)
+    Cc = C.reshape(b, nc, cl, N)
+
+    dA_cum = jnp.cumsum(dAc, axis=2)                              # (b, nc, cl, H)
+    L = jnp.exp(_segsum(dAc))                                     # (b, nc, H, cl, cl)
+    y_diag = jnp.einsum("bcln,bcsn,bchls,bcshp->bclhp", Cc, Bc, L, xc)
+
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)         # (b, nc, cl, H)
+    states = jnp.einsum("bcln,bclh,bclhp->bchpn", Bc, decay_states, xc)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])                    # (b, nc, H)
+
+    s0 = (initial_state if initial_state is not None
+          else jnp.zeros((b, H, Pd, N), x.dtype))
+
+    def scan_fn(s_prev, inp):
+        st, dec = inp                                             # (b,H,P,N), (b,H)
+        s_new = s_prev * dec[:, :, None, None] + st
+        return s_new, s_prev
+
+    states_t = jnp.moveaxis(states, 1, 0)                         # (nc, b, H, P, N)
+    decay_t = jnp.moveaxis(chunk_decay, 1, 0)                     # (nc, b, H)
+    final, prev_states = jax.lax.scan(scan_fn, s0, (states_t, decay_t))
+    prev_states = jnp.moveaxis(prev_states, 0, 1)                 # (b, nc, H, P, N)
+
+    decay_out = jnp.exp(dA_cum)                                   # (b, nc, cl, H)
+    y_off = jnp.einsum("bcln,bchpn,bclh->bclhp", Cc, prev_states, decay_out)
+    y = (y_diag + y_off).reshape(b, T, H, Pd)
+    return y[:, :T0], final
+
+
+def apply_ssm(params: dict, x: jax.Array, spec: SSMSpec,
+              return_state: bool = False):
+    """Training/prefill.  x: (B, T, d_model) -> (B, T, d_model)."""
+    d_model = x.shape[-1]
+    d_in, heads, d_conv = dims(d_model, spec)
+    N = spec.state_dim
+    zxbcdt = x @ params["in_proj"]
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_conv], axis=-1)
+    conv_tail = xBC[:, -(spec.conv_width - 1):, :]                # pre-conv history
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    xs, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(params["A_log"]).astype(x.dtype)
+    xh = xs.reshape(*xs.shape[:-1], heads, spec.head_dim)
+    y, final = ssd_scan(xh, dt, A, B, C, min(spec.chunk, x.shape[1]))
+    y = y + params["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(*x.shape[:-1], d_in)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z))
+    out = y @ params["out_proj"]
+    if return_state:
+        pad = spec.conv_width - 1 - conv_tail.shape[1]
+        if pad > 0:
+            conv_tail = jnp.pad(conv_tail, ((0, 0), (pad, 0), (0, 0)))
+        return out, SSMState(ssm=final, conv=conv_tail)
+    return out
+
+
+def init_state(batch: int, d_model: int, spec: SSMSpec, dtype) -> SSMState:
+    d_in, heads, d_conv = dims(d_model, spec)
+    return SSMState(
+        ssm=jnp.zeros((batch, heads, spec.head_dim, spec.state_dim), dtype),
+        conv=jnp.zeros((batch, spec.conv_width - 1, d_conv), dtype),
+    )
+
+
+def decode_ssm(params: dict, x: jax.Array, state: SSMState, spec: SSMSpec):
+    """Single-token decode.  x: (B, 1, d_model) -> (y, new_state)."""
+    d_model = x.shape[-1]
+    d_in, heads, d_conv = dims(d_model, spec)
+    N = spec.state_dim
+    zxbcdt = x @ params["in_proj"]                                # (B, 1, ...)
+    z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_conv], axis=-1)
+    new_conv = jnp.concatenate([state.conv[:, 1:], xBC], axis=1) if \
+        spec.conv_width > 1 else state.conv
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"], tail=state.conv)
+    xs, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"]).astype(x.dtype)
+    A = -jnp.exp(params["A_log"]).astype(x.dtype)
+    xh = xs.reshape(x.shape[0], heads, spec.head_dim)             # (B, H, P)
+    dt1 = dt[:, 0]                                                # (B, H)
+    dec = jnp.exp(dt1 * A)                                        # (B, H)
+    upd = jnp.einsum("bn,bhp->bhpn", B[:, 0], xh * dt1[..., None])
+    s_new = state.ssm * dec[:, :, None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C[:, 0], s_new)
+    y = y + params["D"].astype(x.dtype)[:, None] * xh
+    y = y.reshape(x.shape[0], 1, d_in)
+    y = apply_norm(params["norm"], y * jax.nn.silu(z))
+    return y @ params["out_proj"], SSMState(ssm=s_new, conv=new_conv)

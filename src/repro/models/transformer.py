@@ -1,0 +1,252 @@
+"""Composable decoder / encoder-decoder transformer over LayerSpec patterns.
+
+The stack is organised as ``num_periods`` repetitions of the config's layer
+pattern (jamba 8-layer interleave, gemma3 6-layer 5:1, plain archs period=1)
+plus unrolled remainder layers.  Parameters for the repeated period are
+*stacked* on a leading axis and the stack is applied with ``lax.scan`` —
+keeping HLO size O(period) rather than O(layers), which is what makes the
+512-device dry-run compiles of 80-layer configs tractable.
+
+Decode scans the same periods while threading per-period cache slices.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import AttentionSpec, LayerSpec, ModelConfig
+from repro.core.moe import DistContext
+from repro.models import blocks
+from repro.models.layers import apply_norm, init_norm
+
+_ENC_SPEC = LayerSpec(mixer="attn", ffn="dense",
+                      attn=AttentionSpec(kind="full", rope=False))
+
+
+def _constrain(x, pspec):
+    if pspec is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, pspec)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    keys = iter(jax.random.split(key, cfg.num_layers + cfg.encoder_layers + 8))
+    cross = cfg.encoder_layers > 0
+    pattern = cfg.pattern
+    np_, rem = cfg.num_periods, cfg.remainder_layers
+
+    params: dict = {
+        "embed": jax.random.normal(next(keys), (cfg.padded_vocab, cfg.d_model),
+                                   dtype) * 0.02,
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = jax.random.normal(
+            next(keys), (cfg.d_model, cfg.padded_vocab), dtype) * (cfg.d_model ** -0.5)
+    if cfg.learned_pos:
+        params["pos_embed"] = jax.random.normal(
+            next(keys), (cfg.learned_pos, cfg.d_model), dtype) * 0.02
+
+    params["pre"] = [blocks.init_layer(next(keys), spec, cfg, cross, dtype)
+                     for spec in cfg.prefix]
+    if np_ > 1:
+        per_period = [
+            [blocks.init_layer(next(keys), spec, cfg, cross, dtype)
+             for spec in pattern]
+            for _ in range(np_)
+        ]
+        params["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    else:
+        params["periods"] = None
+        rem = cfg.num_layers - len(cfg.prefix)
+    params["rem"] = [
+        blocks.init_layer(next(keys), pattern[i % len(pattern)], cfg, cross, dtype)
+        for i in range(rem)
+    ]
+
+    if cfg.encoder_layers:
+        ek = iter(jax.random.split(next(keys), cfg.encoder_layers + 2))
+        enc_layers = [blocks.init_layer(next(ek), _ENC_SPEC, cfg, False, dtype)
+                      for _ in range(cfg.encoder_layers)]
+        params["encoder"] = {
+            "layers": jax.tree.map(lambda *xs: jnp.stack(xs), *enc_layers),
+            "final_norm": init_norm(cfg.d_model, cfg.norm),
+            "pos_embed": jax.random.normal(next(ek), (cfg.encoder_seq, cfg.d_model),
+                                           dtype) * 0.02,
+        }
+    return params
+
+
+# ---------------------------------------------------------------------------
+# embedding / unembedding
+# ---------------------------------------------------------------------------
+
+def embed_inputs(params: dict, cfg: ModelConfig, batch: dict) -> jax.Array:
+    x = jnp.take(params["embed"], batch["tokens"], axis=0)
+    if cfg.num_patch_tokens and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.learned_pos:
+        S = x.shape[1]
+        x = x + params["pos_embed"][:S][None]
+    return x
+
+
+def unembed(params: dict, cfg: ModelConfig, x: jax.Array) -> jax.Array:
+    x = apply_norm(params["final_norm"], x, cfg.norm)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    return (x @ head).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# encoder (whisper): frames are precomputed conv-frontend embeddings (stub)
+# ---------------------------------------------------------------------------
+
+def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
+           ctx: DistContext) -> jax.Array:
+    enc = params["encoder"]
+    x = frames.astype(enc["pos_embed"].dtype) + enc["pos_embed"][None]
+    positions = jnp.broadcast_to(jnp.arange(x.shape[1]), x.shape[:2])
+
+    def body(x, layer_params):
+        x, _ = blocks.apply_layer(layer_params, x, _ENC_SPEC, cfg, ctx,
+                                  positions, causal=False)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, enc["layers"])
+    return apply_norm(enc["final_norm"], x, cfg.norm)
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
+    """Returns (logits: (B, S, V) f32, stats: summed MoE stats)."""
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = encode(params, cfg, batch["frames"], ctx)
+    x = embed_inputs(params, cfg, batch)
+    x = _constrain(x, ctx.act_pspec)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    pattern = cfg.pattern
+    stats_total = blocks.zero_stats(cfg)
+
+    for i, layer_params in enumerate(params.get("pre", [])):
+        x, st = blocks.apply_layer(layer_params, x, cfg.prefix[i], cfg, ctx,
+                                   positions, enc_out=enc_out)
+        x = _constrain(x, ctx.act_pspec)
+        stats_total = jax.tree.map(jnp.add, stats_total, st)
+
+    if params["periods"] is not None:
+        def body(x, period_params):
+            stats_p = blocks.zero_stats(cfg)
+            for i, spec in enumerate(pattern):
+                x, st = blocks.apply_layer(period_params[i], x, spec, cfg, ctx,
+                                           positions, enc_out=enc_out)
+                stats_p = jax.tree.map(jnp.add, stats_p, st)
+            x = _constrain(x, ctx.act_pspec)
+            return x, stats_p
+
+        x, stats_stack = jax.lax.scan(body, x, params["periods"])
+        stats_total = jax.tree.map(lambda a, s: a + s.sum(0), stats_total,
+                                   stats_stack)
+
+    for i, layer_params in enumerate(params["rem"]):
+        spec = pattern[i % len(pattern)]
+        x, st = blocks.apply_layer(layer_params, x, spec, cfg, ctx, positions,
+                                   enc_out=enc_out)
+        x = _constrain(x, ctx.act_pspec)
+        stats_total = jax.tree.map(jnp.add, stats_total, st)
+
+    logits = unembed(params, cfg, x)
+    logits = _constrain(logits, ctx.logits_pspec)
+    return logits, stats_total
+
+
+# ---------------------------------------------------------------------------
+# decode: single-token step with per-layer caches
+# ---------------------------------------------------------------------------
+
+def init_cache(params: dict, cfg: ModelConfig, batch_size: int, seq_len: int,
+               dtype, enc_out: Optional[jax.Array] = None) -> dict:
+    pattern = cfg.pattern
+    cache: dict = {"pos": jnp.int32(0)}
+
+    def layer_cache(spec: LayerSpec, layer_params):
+        cross = layer_params.get("cross") if isinstance(layer_params, dict) else None
+        return blocks.init_layer_cache(spec, cfg, batch_size, seq_len, dtype,
+                                       enc_out=enc_out, cross_params=cross)
+
+    cache["pre"] = [layer_cache(spec, params["pre"][i])
+                    for i, spec in enumerate(cfg.prefix)]
+    if params["periods"] is not None:
+        n = cfg.num_periods
+        per_period = [
+            [layer_cache(spec, jax.tree.map(lambda a: a[p], params["periods"][i]))
+             for i, spec in enumerate(pattern)]
+            for p in range(n)
+        ]
+        cache["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs), *per_period)
+    else:
+        cache["periods"] = None
+    cache["rem"] = [
+        layer_cache(pattern[i % len(pattern)], params["rem"][i])
+        for i in range(len(params["rem"]))
+    ]
+    return cache
+
+
+def decode_step(params: dict, cfg: ModelConfig, ctx: DistContext,
+                cache: dict, tokens: jax.Array):
+    """tokens: (B, 1) -> (logits (B, 1, V), new cache).  Position from cache."""
+    pos = cache["pos"]
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.learned_pos:
+        x = x + jax.lax.dynamic_slice_in_dim(
+            params["pos_embed"], jnp.minimum(pos, cfg.learned_pos - 1), 1, 0)[None]
+    x = x.astype(params["embed"].dtype)
+    pattern = cfg.pattern
+    new_cache: dict = {"pos": pos + 1}
+
+    new_pre = []
+    for i, layer_params in enumerate(params.get("pre", [])):
+        x, c = blocks.apply_layer_decode(layer_params, x, cache["pre"][i],
+                                         cfg.prefix[i], cfg, ctx, pos)
+        new_pre.append(c)
+    new_cache["pre"] = new_pre
+
+    if params["periods"] is not None:
+        def body(x, inp):
+            period_params, period_cache = inp
+            new_pc = []
+            for i, spec in enumerate(pattern):
+                x, c = blocks.apply_layer_decode(period_params[i], x,
+                                                 period_cache[i], spec, cfg,
+                                                 ctx, pos)
+                new_pc.append(c)
+            return x, new_pc
+
+        x, new_periods = jax.lax.scan(body, x, (params["periods"],
+                                                cache["periods"]))
+        new_cache["periods"] = new_periods
+    else:
+        new_cache["periods"] = None
+
+    new_rem = []
+    for i, layer_params in enumerate(params["rem"]):
+        spec = pattern[i % len(pattern)]
+        x, c = blocks.apply_layer_decode(layer_params, x, cache["rem"][i],
+                                         spec, cfg, ctx, pos)
+        new_rem.append(c)
+    new_cache["rem"] = new_rem
+
+    logits = unembed(params, cfg, x)
+    return logits, new_cache

@@ -1,0 +1,1 @@
+from repro.serving.engine import init_serve_cache, make_serve_step, prefill

@@ -1,0 +1,74 @@
+"""Batched serving: prefill + single-token serve_step over static KV caches.
+
+``serve_step`` is what the decode_32k / long_500k dry-run shapes lower: ONE
+new token against a cache of ``seq_len`` entries.  Window/chunked-attention
+layers keep ring caches bounded by their window (how long_500k decode stays
+affordable for mixtral/gemma3/llama4); SSM layers carry constant-size state.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.moe import DistContext
+from repro.models import transformer
+
+
+def init_serve_cache(params: dict, cfg: ModelConfig, batch: int, seq_len: int,
+                     dtype=jnp.float32, enc_out: Optional[jax.Array] = None):
+    return transformer.init_cache(params, cfg, batch, seq_len, dtype,
+                                  enc_out=enc_out)
+
+
+def make_serve_step(cfg: ModelConfig, ctx: DistContext):
+    """Returns step(params, cache, tokens (B,1)) -> (logits, new_cache)."""
+
+    def serve_step(params, cache, tokens):
+        return transformer.decode_step(params, cfg, ctx, cache, tokens)
+
+    return serve_step
+
+
+def prefill(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict,
+            cache_len: int, dtype=jnp.float32):
+    """Run the prompt through the forward pass, then replay it into a decode
+    cache (token-by-token cache fill is exact for every cache variant).
+
+    Returns (next_token_logits, cache).  For production prefill one would
+    write K/V during the forward pass; replay keeps a single code path for
+    full/window/chunked/ssm caches and is used by tests and examples.
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    enc_out = None
+    if cfg.encoder_layers:
+        enc_out = transformer.encode(params, cfg, batch["frames"], ctx)
+    cache = init_serve_cache(params, cfg, B, cache_len, dtype, enc_out=enc_out)
+    step = jax.jit(functools.partial(transformer.decode_step, params, cfg, ctx))
+    logits = None
+    for i in range(S):
+        logits, cache = step(cache, tokens[:, i:i + 1])
+    return logits, cache
+
+
+def generate(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict,
+             steps: int, cache_len: int, temperature: float = 0.0,
+             key: Optional[jax.Array] = None):
+    """Greedy/temperature batched generation (example + test driver)."""
+    logits, cache = prefill(params, cfg, ctx, batch, cache_len)
+    step = jax.jit(functools.partial(transformer.decode_step, params, cfg, ctx))
+    out = []
+    for i in range(steps):
+        if temperature > 0:
+            key, sub = jax.random.split(key)
+            nxt = jax.random.categorical(sub, logits[:, -1] / temperature)
+        else:
+            nxt = jnp.argmax(logits[:, -1], axis=-1)
+        out.append(nxt)
+        logits, cache = step(cache, nxt[:, None].astype(jnp.int32))
+    return jnp.stack(out, axis=1)

@@ -1,0 +1,2 @@
+from repro.training.step import TrainState, init_train_state, make_train_step
+from repro.training.trainer import Trainer

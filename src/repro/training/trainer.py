@@ -1,0 +1,113 @@
+"""Training loop with the MACT dynamic chunk controller in the driver seat.
+
+Each step:
+  1. MACT chooses the chunk bin from the previous step's router load (s''),
+     via the theoretical memory model (Eq. 8-9) — cold-starting from the
+     worst case `s' -> e*s*k`.
+  2. The step function compiled for that bin runs (compiled variants are
+     cached; <= len(bins) compilations ever happen).
+  3. Router loads feed back to MACT; metrics/chunk trace are recorded
+     (benchmarks/fig5 reads the trace).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import HardwareProfile, ModelConfig, TPU_V5E
+from repro.core.mact import MACTController
+from repro.core.memory_model import Parallelism
+from repro.core.moe import DistContext
+from repro.data.pipeline import SyntheticLMData
+from repro.training.step import TrainState, init_train_state, make_train_step
+from repro import checkpointing
+
+
+@dataclass
+class Trainer:
+    cfg: ModelConfig
+    ctx: DistContext
+    seq_len: int
+    global_batch: int
+    lr: float = 3e-4
+    seed: int = 0
+    hw: HardwareProfile = TPU_V5E
+    par: Optional[Parallelism] = None
+    mact_bins: tuple = (1, 2, 4, 8)
+    use_mact: bool = True
+    mact_ep_view: Optional[int] = None   # group experts per hypothetical device
+    static_override: Optional[float] = None
+    checkpoint_dir: Optional[str] = None
+    checkpoint_every: int = 0
+    log: list = field(default_factory=list)
+    chunk_trace: list = field(default_factory=list)
+
+    def __post_init__(self):
+        if self.par is None:
+            ep = data = 1
+            if self.ctx.mesh is not None:
+                shape = dict(zip(self.ctx.mesh.axis_names,
+                                 self.ctx.mesh.devices.shape))
+                if self.cfg.moe is not None:
+                    ep = shape.get(self.ctx.ep_axis, 1)
+                data = shape.get("data", 1) * shape.get("pod", 1)
+            self.par = Parallelism(e=max(ep, 1),
+                                   b=max(1, self.global_batch // data))
+        self.mact = MACTController(
+            self.cfg, self.par, self.hw, self.seq_len, bins=self.mact_bins,
+            static_override=self.static_override)
+        self.data = SyntheticLMData(self.cfg, self.seq_len, self.global_batch,
+                                    self.seed)
+        self._steps: dict[int, object] = {}
+        self._last_load: Optional[np.ndarray] = None
+
+    # -- compiled step per chunk bin ------------------------------------------
+    def _step_for(self, chunks: int):
+        if chunks not in self._steps:
+            ctx = dataclasses.replace(self.ctx, moe_chunks=chunks)
+            self._steps[chunks] = jax.jit(make_train_step(self.cfg, ctx,
+                                                          lr=self.lr))
+        return self._steps[chunks]
+
+    def choose_chunks(self) -> int:
+        if not self.use_mact or self.cfg.moe is None:
+            return self.ctx.moe_chunks
+        ep_view = self.mact_ep_view or max(self.par.e, 1)
+        return self.mact.choose(self._last_load, ep_size=ep_view)
+
+    # -- main loop ---------------------------------------------------------------
+    def fit(self, steps: int, state: Optional[TrainState] = None,
+            verbose: bool = False) -> TrainState:
+        if state is None:
+            state = init_train_state(jax.random.PRNGKey(self.seed), self.cfg)
+        for i in range(steps):
+            chunks = self.choose_chunks()
+            batch = {k: jax.numpy.asarray(v)
+                     for k, v in self.data.batch_at(int(state.step)).items()}
+            t0 = time.perf_counter()
+            state, metrics = self._step_for(chunks)(state, batch)
+            loss = float(metrics["loss"])          # sync point
+            dt = time.perf_counter() - t0
+            load = np.asarray(metrics["load"])
+            self._last_load = load
+            tgs = self.global_batch * self.seq_len / max(dt, 1e-9)
+            rec = {"step": int(state.step), "loss": loss,
+                   "ce": float(metrics["ce"]), "aux": float(metrics["aux"]),
+                   "grad_norm": float(metrics["grad_norm"]),
+                   "chunks": chunks, "time_s": dt, "tgs": tgs,
+                   "max_load": float(load.max()), "drops": float(metrics["drops"])}
+            self.log.append(rec)
+            self.chunk_trace.append(chunks)
+            if verbose:
+                print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
+                      f"c={chunks} tgs={tgs:,.0f}")
+            if (self.checkpoint_dir and self.checkpoint_every
+                    and int(state.step) % self.checkpoint_every == 0):
+                checkpointing.save(self.checkpoint_dir, int(state.step), state)
+        return state

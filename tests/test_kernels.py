@@ -1,0 +1,250 @@
+"""Pallas kernel validation: interpret-mode vs the pure-jnp oracle, swept
+over shapes and dtypes (+ hypothesis property sweep)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ref
+from repro.kernels.grouped_mlp import _pick_block, grouped_matmul, grouped_swiglu
+from repro.kernels.ops import expert_ffn
+
+SHAPES = [
+    (1, 8, 16, 8),
+    (2, 32, 64, 32),
+    (4, 128, 128, 256),
+    (3, 64, 96, 48),      # non-power-of-two
+    (2, 256, 512, 128),
+]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _rand(key, shape, dtype, scale=0.5):
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grouped_matmul_matches_ref(shape, dtype):
+    E, M, K, N = shape
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    x = _rand(k1, (E, M, K), dtype)
+    w = _rand(k2, (E, K, N), dtype, 0.1)
+    out = grouped_matmul(x, w, interpret=True, block_m=32, block_n=32, block_k=32)
+    expect = ref.grouped_matmul_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_grouped_swiglu_matches_ref(shape, dtype):
+    E, M, K, N = shape
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    x = _rand(k1, (E, M, K), dtype)
+    w1 = _rand(k2, (E, K, N), dtype, 0.1)
+    w3 = _rand(k3, (E, K, N), dtype, 0.1)
+    out = grouped_swiglu(x, w1, w3, interpret=True, block_m=32, block_n=32,
+                         block_k=32)
+    expect = ref.grouped_swiglu_ref(x, w1, w3)
+    tol = 1e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_expert_ffn_pallas_path_full():
+    E, C, d, f = 2, 64, 32, 48
+    ks = jax.random.split(jax.random.PRNGKey(2), 4)
+    x = _rand(ks[0], (E, C, d), jnp.float32)
+    w1 = _rand(ks[1], (E, d, f), jnp.float32, 0.1)
+    w3 = _rand(ks[2], (E, d, f), jnp.float32, 0.1)
+    w2 = _rand(ks[3], (E, f, d), jnp.float32, 0.1)
+    out = expert_ffn(x, w1, w3, w2, use_pallas=True, interpret=True)
+    expect = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+def test_expert_ffn_batched_leading_dims():
+    B, E, C, d, f = 3, 2, 16, 8, 12
+    ks = jax.random.split(jax.random.PRNGKey(3), 4)
+    x = _rand(ks[0], (B, E, C, d), jnp.float32)
+    w1 = _rand(ks[1], (E, d, f), jnp.float32, 0.1)
+    w3 = _rand(ks[2], (E, d, f), jnp.float32, 0.1)
+    w2 = _rand(ks[3], (E, f, d), jnp.float32, 0.1)
+    out = expert_ffn(x, w1, w3, w2, use_pallas=True, interpret=True)
+    expect = ref.expert_ffn_ref(x, w1, w3, w2)
+    np.testing.assert_allclose(out, expect, rtol=1e-4, atol=1e-4)
+
+
+@given(e=st.integers(1, 4), m=st.sampled_from([8, 16, 24, 64]),
+       k=st.sampled_from([8, 32, 40]), n=st.sampled_from([8, 16, 56]))
+@settings(max_examples=12, deadline=None)
+def test_grouped_matmul_property(e, m, k, n):
+    key = jax.random.PRNGKey(m * 1000 + k * 10 + n)
+    k1, k2 = jax.random.split(key)
+    x = _rand(k1, (e, m, k), jnp.float32)
+    w = _rand(k2, (e, k, n), jnp.float32, 0.1)
+    out = grouped_matmul(x, w, interpret=True, block_m=8, block_n=8, block_k=8)
+    np.testing.assert_allclose(out, ref.grouped_matmul_ref(x, w),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_pick_block_divides():
+    for dim in (8, 24, 100, 128, 1000):
+        for pref in (8, 32, 128):
+            b = _pick_block(dim, pref)
+            assert dim % b == 0 and 1 <= b <= max(pref, 1)
+
+
+# ---------------------------------------------------------------------------
+# ragged (MegaBlocks-style) kernels
+# ---------------------------------------------------------------------------
+
+from repro.core import dispatch as dsp
+from repro.kernels.ops import ragged_expert_ffn
+from repro.kernels.ragged_mlp import ragged_matmul, ragged_swiglu
+
+
+def _ragged_setup(T=37, K=2, E=4, d=16, f=24, bm=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    idx = jnp.stack([jax.random.permutation(jax.random.fold_in(key, i), E)[:K]
+                     for i in range(T)]).astype(jnp.int32)
+    x = jax.random.normal(jax.random.fold_in(key, 99), (T, d))
+    R = -(-(T * K + E * bm) // bm) * bm
+    plan = dsp.make_ragged_plan(idx, E, R, bm)
+    buf = dsp.scatter_rows_flat(x, plan.slots, R)
+    ks = jax.random.split(key, 3)
+    w1 = jax.random.normal(ks[0], (E, d, f)) * 0.1
+    w3 = jax.random.normal(ks[1], (E, d, f)) * 0.1
+    w2 = jax.random.normal(ks[2], (E, f, d)) * 0.1
+    return plan, buf, w1, w3, w2, idx, x
+
+
+def test_ragged_matmul_matches_ref():
+    plan, buf, w1, _, _, _, _ = _ragged_setup()
+    out = ragged_matmul(buf, w1, plan.block_to_expert, plan.total_rows,
+                        block_m=8, interpret=True)
+    expect = ref.ragged_matmul_ref(buf, w1, plan.block_to_expert,
+                                   plan.total_rows)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_swiglu_matches_ref():
+    plan, buf, w1, w3, _, _, _ = _ragged_setup(seed=1)
+    out = ragged_swiglu(buf, w1, w3, plan.block_to_expert, plan.total_rows,
+                        block_m=8, interpret=True)
+    expect = ref.ragged_swiglu_ref(buf, w1, w3, plan.block_to_expert,
+                                   plan.total_rows)
+    np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_ffn_equals_per_expert_path():
+    plan, buf, w1, w3, w2, idx, x = _ragged_setup(seed=2)
+    T = x.shape[0]
+    h = ragged_expert_ffn(buf, w1, w3, w2, plan.block_to_expert,
+                          plan.total_rows, block_m=8, use_pallas=True,
+                          interpret=True)
+    y_ragged = dsp.gather_rows_flat(h, plan.slots, jnp.ones(idx.shape))
+    plan_d = dsp.make_plan(idx, 4, T)
+    buf_d = dsp.scatter_rows(x, plan_d, 4, T)
+    y_dense = dsp.gather_rows(ref.expert_ffn_ref(buf_d, w1, w3, w2), plan_d,
+                              jnp.ones(idx.shape))
+    np.testing.assert_allclose(np.asarray(y_ragged), np.asarray(y_dense),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_custom_vjp_matches_ref_grads():
+    plan, buf, w1, w3, w2, _, _ = _ragged_setup(seed=3)
+
+    def loss(b, w1, w3, w2, pallas):
+        return ragged_expert_ffn(b, w1, w3, w2, plan.block_to_expert,
+                                 plan.total_rows, block_m=8,
+                                 use_pallas=pallas, interpret=True).sum()
+
+    g_ref = jax.grad(loss, argnums=(0, 1, 2, 3))(buf, w1, w3, w2, False)
+    g_pal = jax.grad(loss, argnums=(0, 1, 2, 3))(buf, w1, w3, w2, True)
+    for a, b in zip(g_ref, g_pal):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+@given(t=st.integers(4, 48), e=st.integers(2, 6), k=st.integers(1, 3),
+       seed=st.integers(0, 30))
+@settings(max_examples=15, deadline=None)
+def test_ragged_plan_properties(t, e, k, seed):
+    """Blocks map to one expert each; slots unique; no drops at worst-case R."""
+    k = min(k, e)
+    bm = 8
+    key = jax.random.PRNGKey(seed)
+    idx = jnp.stack([jax.random.permutation(jax.random.fold_in(key, i), e)[:k]
+                     for i in range(t)]).astype(jnp.int32)
+    R = -(-(t * k + e * bm) // bm) * bm
+    plan = dsp.make_ragged_plan(idx, e, R, bm)
+    assert int(plan.drops) == 0
+    s = np.asarray(plan.slots).reshape(-1)
+    v = s[s >= 0]
+    assert len(np.unique(v)) == len(v)
+    b2e = np.asarray(plan.block_to_expert)
+    for slot, ee in zip(s, np.asarray(idx).reshape(-1)):
+        assert b2e[slot // bm] == ee
+    assert int(plan.total_rows) % bm == 0
+    assert int(np.asarray(plan.load).sum()) == t * k
+
+
+# ---------------------------------------------------------------------------
+# flash attention kernel
+# ---------------------------------------------------------------------------
+
+from repro.configs.base import AttentionSpec
+from repro.kernels.flash_attention import flash_attention
+from repro.models.attention import attention
+
+
+def _fold(x):
+    B, S, H, hd = x.shape
+    return x.transpose(0, 2, 1, 3).reshape(B * H, S, hd)
+
+
+def _unfold(x, B, H):
+    BH, S, hd = x.shape
+    return x.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+
+
+@pytest.mark.parametrize("mode,kwargs,spec", [
+    ("causal", dict(causal=True), AttentionSpec(kind="full")),
+    ("window", dict(causal=True, window=16),
+     AttentionSpec(kind="window", window=16)),
+    ("cross", dict(causal=False), AttentionSpec(kind="full")),
+])
+def test_flash_attention_matches_blocked_jnp(mode, kwargs, spec):
+    B, S, H, hd = 2, 64, 4, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = _unfold(flash_attention(_fold(q), _fold(k), _fold(v),
+                                  interpret=True, block_q=16, block_kv=16,
+                                  **kwargs), B, H)
+    expect = attention(q, k, v, spec, causal=kwargs.get("causal", True),
+                       block_q=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("bq,bk", [(8, 32), (64, 8), (64, 64)])
+def test_flash_attention_block_shape_invariance(bq, bk):
+    B, S, H, hd = 1, 64, 2, 8
+    ks = jax.random.split(jax.random.PRNGKey(8), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, H, hd))
+    v = jax.random.normal(ks[2], (B, S, H, hd))
+    out = _unfold(flash_attention(_fold(q), _fold(k), _fold(v), causal=True,
+                                  interpret=True, block_q=bq, block_kv=bk),
+                  B, H)
+    expect = attention(q, k, v, AttentionSpec(kind="full"), block_q=16)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-5, atol=2e-5)

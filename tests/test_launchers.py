@@ -1,0 +1,42 @@
+"""CLI launcher smoke tests (subprocess, real argv paths)."""
+
+import os
+import subprocess
+import sys
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+ENV = {**os.environ, "PYTHONPATH": os.path.join(REPO, "src")}
+
+
+def _run(args, timeout=600):
+    out = subprocess.run([sys.executable, "-m"] + args, capture_output=True,
+                         text=True, timeout=timeout, env=ENV, cwd=REPO)
+    assert out.returncode == 0, f"{args}\n{out.stdout}\n{out.stderr}"
+    return out.stdout
+
+
+def test_train_cli_smoke():
+    out = _run(["repro.launch.train", "--arch", "llama3.2-3b", "--smoke",
+                "--steps", "3", "--seq-len", "32", "--global-batch", "2",
+                "--no-mact"])
+    assert "final loss" in out
+
+
+def test_train_cli_with_mact_and_chunks():
+    out = _run(["repro.launch.train", "--arch", "mixtral-8x7b", "--smoke",
+                "--steps", "2", "--seq-len", "32", "--global-batch", "2",
+                "--chunks", "2", "--no-mact", "--remat", "full"])
+    assert "final loss" in out
+
+
+def test_serve_cli_smoke():
+    out = _run(["repro.launch.serve", "--arch", "gemma3-27b", "--smoke",
+                "--batch", "2", "--prompt-len", "8", "--gen", "4"])
+    assert "generated" in out
+
+
+def test_dryrun_cli_tiny():
+    out = _run(["repro.launch.dryrun", "--arch", "mamba2-130m",
+                "--shape", "long_500k", "--out", "/tmp/dryrun_test"],
+               timeout=900)
+    assert "[ok]" in out

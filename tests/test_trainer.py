@@ -1,0 +1,75 @@
+"""Trainer-level integration: MACT in the loop, checkpoint/resume, schedules."""
+
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpointing import latest_step, restore, save
+from repro.configs import get_config
+from repro.configs.base import HardwareProfile
+from repro.core.moe import DistContext
+from repro.training.step import init_train_state
+from repro.training.trainer import Trainer
+
+TIGHT = HardwareProfile("tight", hbm_bytes=2e6, peak_flops=1, hbm_bw=1,
+                        ici_bw=1, alpha=0.9)
+
+
+def test_mact_switches_bins_under_pressure():
+    cfg = get_config("deepseek-mini-8l").reduced()
+    tr = Trainer(cfg, DistContext(), seq_len=128, global_batch=4, lr=1e-3,
+                 use_mact=True, hw=TIGHT, static_override=0.0,
+                 mact_ep_view=cfg.moe.num_experts)
+    tr.fit(6)
+    assert len(set(tr.chunk_trace)) >= 1
+    assert all(c in (1, 2, 4, 8) for c in tr.chunk_trace)
+    # at most len(bins) distinct compiled steps ever exist
+    assert len(tr._steps) <= 4
+
+
+def test_trainer_checkpoints_and_resumes(tmp_path):
+    cfg = get_config("llama3.2-3b").reduced()
+    tr = Trainer(cfg, DistContext(), seq_len=32, global_batch=2, lr=1e-3,
+                 checkpoint_dir=str(tmp_path), checkpoint_every=2)
+    state = tr.fit(4)
+    step = latest_step(str(tmp_path))
+    assert step in (2, 4)
+    like = init_train_state(jax.random.PRNGKey(0), cfg)
+    restored = restore(str(tmp_path), step, like)
+    assert int(np.asarray(restored.step)) == step
+    # resume continues without error and advances
+    tr2 = Trainer(cfg, DistContext(), seq_len=32, global_batch=2, lr=1e-3)
+    state2 = tr2.fit(2, state=restored)
+    assert int(state2.step) == step + 2
+
+
+def test_fixed_chunks_without_mact():
+    cfg = get_config("mixtral-8x7b").reduced()
+    ctx = DistContext(moe_chunks=4)
+    tr = Trainer(cfg, ctx, seq_len=64, global_batch=2, lr=1e-3, use_mact=False)
+    tr.fit(3)
+    assert tr.chunk_trace == [4, 4, 4]
+
+
+def test_loss_free_bias_updates_in_train_loop():
+    base = get_config("deepseek-mini-8l").reduced()
+    cfg = dataclasses.replace(
+        base, moe=dataclasses.replace(base.moe, loss_free_bias=True,
+                                      bias_update_rate=0.01))
+    state = init_train_state(jax.random.PRNGKey(0), cfg)
+    from repro.training.step import make_train_step
+    from repro.data.pipeline import SyntheticLMData
+    import jax.numpy as jnp
+    step = jax.jit(make_train_step(cfg, DistContext(), lr=1e-3))
+    batch = {k: jnp.asarray(v) for k, v in
+             SyntheticLMData(cfg, 32, 2).batch_at(0).items()}
+    state2, _ = step(state, batch)
+    before = [np.asarray(l) for p, l in
+              jax.tree_util.tree_flatten_with_path(state.params)[0]
+              if "bias" in str(p) and "router" in str(p)]
+    after = [np.asarray(l) for p, l in
+             jax.tree_util.tree_flatten_with_path(state2.params)[0]
+             if "bias" in str(p) and "router" in str(p)]
+    assert any((a != b).any() for a, b in zip(before, after))
