@@ -4,7 +4,7 @@ buffer assignment of the production-mesh dry-run (paper Model II, train_4k,
 
 Reads the cached sweep results when present; otherwise launches the dry-run
 subprocess per chunk setting (c=1 Method 1 analogue, c=2, c=8).  Note the
-CPU-backend bf16 legalization inflates absolute bytes ~2x vs TPU (DESIGN.md);
+CPU-backend bf16 legalization inflates absolute bytes ~2x vs TPU (docs/DESIGN.md);
 the RATIOS are the result.
 """
 

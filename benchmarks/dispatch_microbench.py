@@ -1,0 +1,136 @@
+"""Dispatch-planning microbench: the per-chunk cost MACT multiplies.
+
+Three variants of the per-chunk dispatch -> (identity expert) -> combine
+path, timed across FCDA chunk counts c ∈ {1, 2, 4, 8}:
+
+  * ``two_sort``    — the old construction: one stable argsort for the
+    device plan + one for the expert/ragged plan, ``.at[].add`` scatters.
+  * ``single_sort`` — the unified planner (one argsort; the receiver plan
+    falls out of cumsums over the counts matrix), jnp scatters.
+  * ``pallas_interp`` — single-sort planner + the Pallas scatter/gather
+    kernels in interpret mode (functional check of the kernel path; on CPU
+    the interpreter adds overhead, so treat these numbers as a trajectory
+    anchor for TPU runs, not a win in themselves).
+
+Emits CSV lines per repo convention and writes ``BENCH_dispatch.json`` so
+later PRs can track the trajectory.
+"""
+
+from __future__ import annotations
+
+import json
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dispatch as dsp
+from repro.kernels import ops
+
+T_TOTAL = 2048          # tokens per step (split into c chunks)
+E = 8                   # experts
+K = 2                   # top_k
+D = 64                  # model dim
+BLOCK = 128             # ragged block
+CHUNKS = (1, 2, 4, 8)
+REPEATS = 20
+
+
+def _chunk_fn_two_sort(xc, idx):
+    """The old EP chunk: argsort #1 for the device plan, scatter into the
+    send buffer, argsort #2 for the ragged plan over the received rows."""
+    t_c = xc.shape[0]
+    cap_send = t_c * K
+    R = cap_send + E * BLOCK
+    R = -(-R // BLOCK) * BLOCK
+    plan_dev = dsp.make_plan(idx // E, 1, cap_send)            # sort #1
+    send = dsp.scatter_rows(xc, plan_dev, 1, cap_send)
+    eid = dsp.scatter_values(idx, plan_dev, 1, cap_send,
+                             fill=jnp.int32(-1)).reshape(-1)
+    rows = send.reshape(cap_send, -1)                          # P=1: no a2a
+    valid = eid >= 0
+    plan_r = dsp.make_ragged_plan(                             # sort #2
+        jnp.where(valid, eid, E)[:, None], E, R, BLOCK,
+        valid=valid[:, None])
+    buf = dsp.scatter_rows_flat(rows, plan_r.slots, R)
+    back = dsp.gather_rows_flat(buf, plan_r.slots)
+    return dsp.gather_rows(back.reshape(1, cap_send, -1), plan_dev,
+                           jnp.ones((t_c, K), xc.dtype))
+
+
+def _chunk_fn_single_sort(xc, idx, use_pallas=False):
+    """The new EP chunk: ONE argsort; the receiver plan falls out of
+    cumsums over the counts matrix."""
+    t_c = xc.shape[0]
+    cap_send = t_c * K
+    R = cap_send + E * BLOCK
+    R = -(-R // BLOCK) * BLOCK
+    up = dsp.make_unified_plan(idx, E, 1, cap_send=cap_send)   # THE sort
+    send = ops.dispatch_rows(xc, up.send_slots, cap_send,
+                             use_pallas=use_pallas, interpret=use_pallas)
+    eid = dsp.eids_from_counts(up.counts, cap_send)            # no eid buffer
+    plan_r = dsp.recv_ragged_plan(up.counts, eid, R, BLOCK)    # no sort
+    buf = ops.dispatch_rows(send, plan_r.slots, R,
+                            total_rows=plan_r.total_rows,
+                            use_pallas=use_pallas, interpret=use_pallas)
+    back = ops.combine_rows(buf, plan_r.slots, use_pallas=use_pallas,
+                            interpret=use_pallas)
+    return ops.combine_rows(back, up.send_slots,
+                            jnp.ones((t_c, K), xc.dtype),
+                            use_pallas=use_pallas, interpret=use_pallas)
+
+
+def _time_variant(name, fn, chunks):
+    t_c = T_TOTAL // chunks
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.standard_normal((T_TOTAL, D)), jnp.float32)
+    idx = jnp.asarray(
+        np.stack([rng.permutation(E)[:K] for _ in range(T_TOTAL)]), jnp.int32)
+
+    @jax.jit
+    def step(x, idx):
+        xs = x.reshape(chunks, t_c, D)
+        ids = idx.reshape(chunks, t_c, K)
+        ys = jax.lax.map(lambda a: fn(a[0], a[1]), (xs, ids))
+        return ys.reshape(T_TOTAL, D)
+
+    step(x, idx).block_until_ready()            # compile
+    best = float("inf")
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        step(x, idx).block_until_ready()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e3                           # min-of-N: robust to CPU noise
+
+
+def run() -> list[str]:
+    variants = {
+        "two_sort": _chunk_fn_two_sort,
+        "single_sort": lambda xc, idx: _chunk_fn_single_sort(xc, idx, False),
+        "pallas_interp": lambda xc, idx: _chunk_fn_single_sort(xc, idx, True),
+    }
+    lines, results = [], []
+    for chunks in CHUNKS:
+        row = {"chunks": chunks}
+        for name, fn in variants.items():
+            if name == "pallas_interp" and chunks > 2:
+                continue            # interpreter is slow; 2 points anchor it
+            ms = _time_variant(name, fn, chunks)
+            row[name] = round(ms, 3)
+            lines.append(f"dispatch,{name},chunks={chunks},ms={ms:.3f}")
+        if "two_sort" in row and "single_sort" in row:
+            speedup = row["two_sort"] / max(row["single_sort"], 1e-9)
+            row["speedup_single_vs_two"] = round(speedup, 3)
+            lines.append(f"dispatch,speedup,chunks={chunks},"
+                         f"single_vs_two_sort={speedup:.3f}")
+        results.append(row)
+    with open("BENCH_dispatch.json", "w") as f:
+        json.dump({"tokens": T_TOTAL, "experts": E, "top_k": K, "d": D,
+                   "repeats": REPEATS, "rows": results}, f, indent=2)
+    lines.append("dispatch,written=BENCH_dispatch.json")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -4,7 +4,7 @@ Method 1: no chunking + full recomputation (Megatron baseline).
 Method 2: MemFine, fixed c=8.
 Method 3: MemFine + MACT (bins [1,2,4,8]).
 
-We report the theoretical-model numbers with the calibrated s'' (DESIGN.md)
+We report the theoretical-model numbers with the calibrated s'' (docs/DESIGN.md)
 next to the paper's measured GB, and the reduction ratios the paper headlines
 (-83.84 % / -48.03 %).  Units follow the paper's table (decimal GB).
 """

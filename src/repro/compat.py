@@ -1,0 +1,68 @@
+"""Version shims for the JAX APIs this repo uses across jax releases.
+
+The repo targets the modern spellings (``jax.shard_map`` with ``check_vma``,
+``jax.set_mesh``); older releases (< 0.5) expose the same machinery under
+``jax.experimental.shard_map.shard_map(check_rep=...)`` and make ``Mesh``
+itself the ambient-mesh context manager.  Everything that enters a shard_map
+region or sets an ambient mesh goes through here so the rest of the code can
+stay version-agnostic.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+
+__all__ = ["shard_map", "set_mesh", "make_mesh", "axis_size"]
+
+
+def axis_size(axis_name) -> int:
+    """Static size of a named mesh axis inside a shard_map/pmap region.
+
+    ``jax.lax.axis_size`` on new jax; on old releases the axis env records
+    the same static size under ``jax.core.axis_frame``.
+    """
+    from jax import lax
+    if hasattr(lax, "axis_size"):
+        return lax.axis_size(axis_name)
+    import jax.core as core
+    return core.axis_frame(axis_name)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool | None = None):
+    """``jax.shard_map`` on new jax, ``jax.experimental.shard_map`` otherwise.
+
+    ``check_vma`` (new name) maps onto ``check_rep`` (old name); ``None``
+    means library default.
+    """
+    if hasattr(jax, "shard_map"):
+        kwargs = {} if check_vma is None else {"check_vma": check_vma}
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, **kwargs)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    kwargs = {} if check_vma is None else {"check_rep": check_vma}
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **kwargs)
+
+
+def set_mesh(mesh):
+    """Context manager making ``mesh`` the ambient mesh.
+
+    New jax: ``jax.set_mesh``.  Old jax: ``Mesh`` is itself a context
+    manager with the same effect for jit/NamedSharding resolution.
+    """
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    if hasattr(mesh, "__enter__"):
+        return mesh
+    return contextlib.nullcontext(mesh)
+
+
+def make_mesh(axis_shapes, axis_names):
+    """``jax.make_mesh`` with a fallback for releases that predate it."""
+    if hasattr(jax, "make_mesh"):
+        return jax.make_mesh(tuple(axis_shapes), tuple(axis_names))
+    import numpy as np
+    devs = np.asarray(jax.devices()).reshape(tuple(axis_shapes))
+    return jax.sharding.Mesh(devs, tuple(axis_names))

@@ -95,7 +95,7 @@ class ModelConfig:
     # multimodal stubs ------------------------------------------------------
     num_patch_tokens: int = 0       # VLM: leading positions fed by patch embeddings
     learned_pos: int = 0            # learned position-embedding table size (whisper)
-    # long-context eligibility (see DESIGN.md §4)
+    # long-context eligibility (see docs/DESIGN.md §4)
     subquadratic: bool = False
     # MemFine scheduling ----------------------------------------------------
     remat_policy: str = "memfine"   # "none" | "full" | "memfine"
@@ -253,7 +253,7 @@ def get_config(name: str) -> ModelConfig:
 
 
 def long_context_eligible(cfg: ModelConfig) -> bool:
-    """long_500k runs only for sub-quadratic archs (DESIGN.md §4)."""
+    """long_500k runs only for sub-quadratic archs (docs/DESIGN.md §4)."""
     return cfg.subquadratic
 
 

@@ -5,7 +5,7 @@ FFN), g_e=2048 (expert FFN), top-k=8, V=129280, d_l=3 leading dense layers.
 DeepSeek-V3 routing shape: 256 routed experts + 1 shared expert, top-8,
 auxiliary-loss-free bias balancing.  [paper Table 3; arXiv:2412.19437]
 
-Adaptation note (DESIGN.md §2): the paper trains with MLA; Table 2's memory
+Adaptation note (docs/DESIGN.md §2): the paper trains with MLA; Table 2's memory
 model parameterises attention as generic (a, k_a, h_d), so we instantiate
 standard MHA with head_dim=128 and k_a=a.  256 % 16 == 0 -> ep_shardmap.
 """
@@ -31,7 +31,7 @@ def _model(name: str, layers: int) -> ModelConfig:
     # 3 unrolled dense layers, then a scan over identical MoE layers: the
     # scan (an HLO while loop) also serialises per-layer buffer liveness,
     # which XLA-CPU's scheduler does not do for unrolled layers
-    # (EXPERIMENTS.md §Perf iteration 1.2).
+    # (docs/DESIGN.md §Perf; trajectory in the BENCH_*.json artifacts).
     prefix, pattern = (_DENSE,) * 3, (_MOE,)
     return ModelConfig(
         name=name,
@@ -40,7 +40,7 @@ def _model(name: str, layers: int) -> ModelConfig:
         num_layers=layers,
         d_model=7168,
         num_heads=128,
-        num_kv_heads=8,   # GQA stand-in for MLA's compressed KV (DESIGN.md §2)
+        num_kv_heads=8,   # GQA stand-in for MLA's compressed KV (docs/DESIGN.md §2)
         d_ff=18432,
         vocab_size=129280,
         head_dim=128,

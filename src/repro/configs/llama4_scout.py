@@ -6,7 +6,7 @@
 Attention follows the iRoPE layout: 3 chunked-local-attention layers
 (chunk 8192, RoPE) then 1 global layer (NoPE) — which makes the arch
 sub-quadratic in cache *compute* for local layers and long_500k eligible
-with the chunked-local variant (DESIGN.md §4).  Early fusion: multimodal
+with the chunked-local variant (docs/DESIGN.md §4).  Early fusion: multimodal
 patches would enter as embeddings; the text backbone is what we build.
 """
 

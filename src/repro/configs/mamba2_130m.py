@@ -2,7 +2,7 @@
 
 24L, d_model=768, ssm_state=128, vocab=50280, no FFN (d_ff=0): each layer is a
 single Mamba-2 mixer.  MemFine's MoE chunking is inapplicable (no MoE) — see
-DESIGN.md §Arch-applicability; the memory model + remat scheduling still apply.
+docs/DESIGN.md §Arch-applicability; the memory model + remat scheduling still apply.
 """
 
 from repro.configs.base import LayerSpec, ModelConfig, SSMSpec

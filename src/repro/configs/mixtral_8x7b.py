@@ -2,7 +2,7 @@
 
 32L, d_model=4096, 32 heads (GQA kv=8), expert d_ff=14336, vocab=32000, SWA 4096.
 8 experts do not divide the 16-wide model axis -> expert strategy falls back to
-tp_gspmd (DESIGN.md §2); FCDA chunking applies unchanged.
+tp_gspmd (docs/DESIGN.md §2); FCDA chunking applies unchanged.
 """
 
 from repro.configs.base import AttentionSpec, LayerSpec, ModelConfig, MoEConfig

@@ -18,5 +18,5 @@ CONFIG = ModelConfig(
     head_dim=128,
     pattern=(LayerSpec(mixer="attn", ffn="dense", attn=AttentionSpec(kind="full")),),
     rope_theta=100000.0,
-    subquadratic=False,  # full attention -> long_500k skipped (DESIGN.md §4)
+    subquadratic=False,  # full attention -> long_500k skipped (docs/DESIGN.md §4)
 )

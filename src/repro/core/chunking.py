@@ -5,7 +5,7 @@ dispatch -> expert compute -> combine *sequentially*; outputs concatenate.
 Backward (Eq. 7): each chunk is recomputed independently — expressed here as
 ``jax.checkpoint`` around the chunk body under a sequential ``lax.scan``, so
 both the live dispatch buffers and the saved residuals scale with one chunk,
-not the whole token set.  Peak MoE activation drops by (c-1)/c (DESIGN.md §2).
+not the whole token set.  Peak MoE activation drops by (c-1)/c (docs/DESIGN.md §2).
 """
 
 from __future__ import annotations

@@ -144,6 +144,183 @@ def gather_rows_flat(buf: jax.Array, slots: jax.Array,
     return (out * valid).sum(axis=1)
 
 
+# ---------------------------------------------------------------------------
+# single-sort unified planning (docs/DESIGN.md §Dispatch)
+# ---------------------------------------------------------------------------
+
+class UnifiedPlan(NamedTuple):
+    """Every dispatch layout derived from ONE stable argsort of expert ids.
+
+    Because experts are contiguous per EP peer (peer p owns experts
+    ``[p*E/P, (p+1)*E/P)``), sorting token-slots by *global expert id* also
+    groups them by target device — the coarse (device) plan and the fine
+    (expert) plan are two read-outs of the same permutation, where the old
+    path paid one argsort for each (``make_plan`` on ``expert_idx // e_local``
+    then ``make_ragged_plan`` on the received rows).
+
+    The receiver side needs no sort at all: within each peer's send block
+    rows are expert-sorted, so shipping the tiny ``counts`` matrix through
+    the same all-to-all lets the receiver place every row with cumsums
+    (see ``recv_expert_plan`` / ``recv_ragged_plan``).
+    """
+    send_slots: jax.Array | None    # (T, K) int32 into flat (P*cap_send), -1 dropped
+    expert_slots: jax.Array | None  # (T, K) int32 into flat (E*cap_expert), -1 dropped
+    counts: jax.Array               # (P, E//P) int32 — slots PACKED per (dst peer, peer-local expert)
+    expert_load: jax.Array          # (E,) int32 demand per expert (pre-clip)
+    peer_load: jax.Array            # (P,) int32 demand per peer (pre-clip)
+    drops: jax.Array                # scalar int32 — send-side (peer-capacity) drops
+    drops_expert: jax.Array         # scalar int32 — expert-capacity drops
+
+
+def make_unified_plan(expert_idx: jax.Array, num_experts: int,
+                      num_peers: int = 1, *, cap_send: int | None = None,
+                      cap_expert: int | None = None) -> UnifiedPlan:
+    """expert_idx: (T, K) int32 global expert ids -> UnifiedPlan.
+
+    Exactly one stable argsort, regardless of how many layouts are read out
+    (asserted by tests/test_dispatch_planner.py on the jaxpr).
+    """
+    if num_experts % num_peers:
+        raise ValueError(f"E={num_experts} not divisible by P={num_peers}")
+    e_local = num_experts // num_peers
+    T, K = expert_idx.shape
+    N = T * K
+    flat = expert_idx.reshape(-1)
+    order = jnp.argsort(flat, stable=True)                 # THE one sort
+    sorted_e = flat[order]
+    pos = jnp.arange(N, dtype=jnp.int32)
+
+    expert_load = jnp.zeros((num_experts,), jnp.int32).at[flat].add(1)
+    e_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(expert_load)[:-1]])
+    rank_e = pos - e_starts[sorted_e]                      # rank within expert
+
+    peer_load = expert_load.reshape(num_peers, e_local).sum(1)
+    p_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(peer_load)[:-1]])
+    sorted_p = sorted_e // e_local
+    rank_p = pos - p_starts[sorted_p]                      # rank within peer
+
+    send_slots = None
+    drops_send = jnp.int32(0)
+    counts = expert_load.reshape(num_peers, e_local)
+    if cap_send is not None:
+        ok = rank_p < cap_send
+        slot_sorted = jnp.where(ok, sorted_p * cap_send + rank_p, -1)
+        send_slots = jnp.zeros((N,), jnp.int32).at[order].set(
+            slot_sorted).reshape(T, K)
+        drops_send = (N - ok.sum()).astype(jnp.int32)
+        # slots packed per (peer, expert) after the cap clip: within a peer
+        # rows are expert-sorted, so the clip truncates the tail experts
+        within = e_starts - p_starts[jnp.arange(num_experts) // e_local]
+        sent = jnp.clip(cap_send - within, 0, expert_load)
+        counts = sent.reshape(num_peers, e_local)
+
+    expert_slots = None
+    drops_expert = jnp.int32(0)
+    if cap_expert is not None:
+        ok = rank_e < cap_expert
+        slot_sorted = jnp.where(ok, sorted_e * cap_expert + rank_e, -1)
+        expert_slots = jnp.zeros((N,), jnp.int32).at[order].set(
+            slot_sorted).reshape(T, K)
+        drops_expert = (N - ok.sum()).astype(jnp.int32)
+
+    return UnifiedPlan(send_slots, expert_slots, counts, expert_load,
+                       peer_load, drops_send, drops_expert)
+
+
+def _recv_positions(recv_counts: jax.Array, recv_eid: jax.Array):
+    """Shared receiver-side arithmetic: for each received row, its expert and
+    its rank within that expert across all source peers — cumsums only.
+
+    recv_counts: (P, e_local) — rows from source p for local expert e.
+    recv_eid: (P*cap_send,) local expert id per received row, -1 invalid.
+    Relies on the sender invariant that each source block is expert-sorted
+    and packed from position 0 (make_unified_plan guarantees both).
+    """
+    P, e_local = recv_counts.shape
+    Rr = recv_eid.shape[0]
+    cap_src = Rr // P
+    # rows from sources before p for each expert (exclusive cumsum over P)
+    src_off = jnp.concatenate(
+        [jnp.zeros((1, e_local), jnp.int32),
+         jnp.cumsum(recv_counts, axis=0)[:-1]], axis=0)
+    # start of expert e inside source block p (exclusive cumsum over e)
+    blk_start = jnp.concatenate(
+        [jnp.zeros((P, 1), jnp.int32),
+         jnp.cumsum(recv_counts, axis=1)[:, :-1]], axis=1)
+    p = jnp.arange(Rr, dtype=jnp.int32) // cap_src
+    i = jnp.arange(Rr, dtype=jnp.int32) - p * cap_src
+    valid = recv_eid >= 0
+    e = jnp.where(valid, recv_eid, 0)
+    idx = p * e_local + e
+    rank = (src_off.reshape(-1)[idx] + i - blk_start.reshape(-1)[idx])
+    load = recv_counts.sum(0)
+    return e, rank, valid, load
+
+
+def eids_from_counts(recv_counts: jax.Array, cap_src: int) -> jax.Array:
+    """Reconstruct per-row local expert ids from the counts matrix alone:
+    (P, e_local) -> (P*cap_src,) int32, -1 for unoccupied slots.
+
+    Each source block is expert-sorted and packed from position 0 (the
+    sender invariant), so row i of block p belongs to the first expert whose
+    inclusive cumulative count exceeds i.  This replaces shipping an expert-id
+    buffer through its own scatter + all_to_all — one fewer collective and
+    one fewer serialized scatter per chunk."""
+    P, e_local = recv_counts.shape
+    cum = jnp.cumsum(recv_counts, axis=1)                  # (P, e_local)
+    i = jnp.arange(cap_src, dtype=jnp.int32)
+    eid = (i[None, :, None] >= cum[:, None, :]).sum(-1)    # (P, cap_src)
+    valid = i[None, :] < cum[:, -1:]
+    return jnp.where(valid, eid, -1).reshape(-1).astype(jnp.int32)
+
+
+def recv_expert_plan(recv_counts: jax.Array, recv_eid: jax.Array,
+                     capacity: int) -> DispatchPlan:
+    """Receiver-side (E_local, capacity) plan from the exchanged counts
+    matrix — zero sorts (the sender's single sort already ordered rows)."""
+    e, rank, valid, load = _recv_positions(recv_counts, recv_eid)
+    ok = valid & (rank < capacity)
+    slots = jnp.where(ok, e * capacity + rank, -1)
+    drops = (valid.sum() - ok.sum()).astype(jnp.int32)
+    return DispatchPlan(slots[:, None], load, drops)
+
+
+def recv_ragged_plan(recv_counts: jax.Array, recv_eid: jax.Array,
+                     rows: int, block_m: int) -> RaggedPlan:
+    """Receiver-side MegaBlocks-style flat plan from the counts matrix —
+    zero sorts; drop-in replacement for ``make_ragged_plan`` on the EP path."""
+    e, rank, valid, load = _recv_positions(recv_counts, recv_eid)
+    e_local = recv_counts.shape[1]
+    aligned = -(-load // block_m) * block_m
+    g_starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                                jnp.cumsum(aligned)])      # (e_local+1,)
+    slot = g_starts[e] + rank
+    ok = valid & (slot < rows)
+    slots = jnp.where(ok, slot, -1)
+    drops = (valid.sum() - ok.sum()).astype(jnp.int32)
+    block_starts = jnp.arange(rows // block_m, dtype=jnp.int32) * block_m
+    b2e = jnp.clip(
+        jnp.searchsorted(g_starts[1:], block_starts, side="right"),
+        0, e_local - 1).astype(jnp.int32)
+    return RaggedPlan(slots[:, None], b2e, g_starts[-1], load, drops)
+
+
+def invert_slots(slots: jax.Array, rows: int) -> jax.Array:
+    """slots: (T, K) -> (rows,) int32 source flat-position map, -1 = empty.
+
+    The scatter direction expressed as a gather: output row r comes from
+    token-slot ``inv[r]`` (slots are unique, so this is a true inverse).
+    Feeds the scalar-prefetched index maps of kernels/dispatch_pallas.py.
+    """
+    flat = slots.reshape(-1)
+    N = flat.shape[0]
+    pos = jnp.arange(N, dtype=jnp.int32)
+    idx = jnp.where(flat >= 0, flat, rows)
+    return jnp.full((rows,), -1, jnp.int32).at[idx].set(pos, mode="drop")
+
+
 def dropless_capacity(tokens: int) -> int:
     """Worst-case per-group capacity for dropless dispatch: the K experts a
     token picks are distinct, so one expert can receive at most T tokens."""

@@ -3,7 +3,7 @@
 Megatron MemFine moves tokens between EP ranks with NCCL all-to-alls around
 each expert's GEMM; the JAX/TPU analogue is a ``jax.shard_map`` region over
 the ``model`` mesh axis with explicit ``lax.all_to_all`` collectives, one
-dispatch + one combine per FCDA chunk (DESIGN.md §2).
+dispatch + one combine per FCDA chunk (docs/DESIGN.md §2).
 
 Buffer sizing is the heart of the memory story: under dropless routing the
 send block per peer must hold the worst case (every local token-slot targets
@@ -23,11 +23,14 @@ import jax.numpy as jnp
 from jax import lax
 from jax.sharding import PartitionSpec as P
 
+from repro import compat
+from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as dsp
 from repro.core.chunking import chunked_map
 from repro.core.router import route
-from repro.kernels.ops import expert_ffn, ragged_expert_ffn
+from repro.kernels.ops import (combine_rows, dispatch_rows, expert_ffn,
+                               ragged_expert_ffn)
 
 RAGGED_BLOCK = 128
 
@@ -37,8 +40,7 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
               use_pallas: bool, ragged: bool = False,
               interpret: bool = False):
     """Per-device body. x_l: (B_l, S_l, d) local tokens."""
-    peers = lax.axis_size(ep_axis)
-    rank = lax.axis_index(ep_axis)
+    peers = compat.axis_size(ep_axis)
     E = moe_cfg.num_experts
     e_local = E // peers
     b_l, s_l, d = x_l.shape
@@ -59,53 +61,65 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
             cap_send = dsp.balanced_capacity(t_c, k, peers, moe_cfg.capacity_factor)
             cap_recv = dsp.balanced_capacity(peers * t_c, k, E,
                                              moe_cfg.capacity_factor)
-        # ---- dispatch: group token-slots by target device, exchange --------
-        target_dev = r.expert_idx // e_local                       # (t_c, k)
-        plan_s = dsp.make_plan(target_dev, peers, cap_send)
-        send = dsp.scatter_rows(xc, plan_s, peers, cap_send)       # (P, cap_s, d)
-        send_eid = dsp.scatter_values(r.expert_idx, plan_s, peers, cap_send,
-                                      fill=jnp.int32(-1))          # (P, cap_s)
+        # ---- dispatch: ONE stable argsort per chunk plans everything ------
+        # sorting by global expert id groups by target device too (experts
+        # are contiguous per peer), and within each peer block rows arrive
+        # expert-sorted, so the receiver places rows with cumsums over the
+        # exchanged counts matrix — no second sort (docs/DESIGN.md §Dispatch)
+        uplan = dsp.make_unified_plan(r.expert_idx, E, peers,
+                                      cap_send=cap_send)
+        send = dispatch_rows(xc, uplan.send_slots, peers * cap_send,
+                             use_pallas=use_pallas, interpret=interpret)
+        send = send.reshape(peers, cap_send, d)                    # (P, cap_s, d)
         recv = lax.all_to_all(send, ep_axis, 0, 0, tiled=True)
-        recv_eid = lax.all_to_all(send_eid, ep_axis, 0, 0, tiled=True)
+        recv_cnt = lax.all_to_all(uplan.counts, ep_axis, 0, 0, tiled=True)
         # ---- local expert compute ----------------------------------------
+        # no expert-id buffer travels with the rows: each source block is
+        # expert-sorted and packed from 0, so the counts matrix alone
+        # reconstructs every row's expert (dsp.eids_from_counts)
         rows = recv.reshape(peers * cap_send, d)
-        flat_eid = recv_eid.reshape(-1)
-        valid = flat_eid >= 0
-        local_e = jnp.where(valid, flat_eid - rank * e_local, e_local)
+        local_e = dsp.eids_from_counts(recv_cnt, cap_send)
         if ragged:
             # MegaBlocks-style flat layout: R worst-case rows + block padding
             # instead of (E_local, cap_recv) per-expert buffers — E_local/k
-            # fewer buffer rows, and the Pallas kernel predicates off blocks
-            # past the actual load (EXPERIMENTS.md §Perf).
+            # fewer buffer rows, and the Pallas kernels predicate off blocks
+            # past the actual load (docs/DESIGN.md §Perf).
             R = peers * cap_send + e_local * RAGGED_BLOCK
             R = -(-R // RAGGED_BLOCK) * RAGGED_BLOCK
-            plan_r = dsp.make_ragged_plan(local_e[:, None], e_local, R,
-                                          RAGGED_BLOCK,
-                                          valid=valid[:, None])
-            buf = dsp.scatter_rows_flat(rows, plan_r.slots, R)
+            plan_r = dsp.recv_ragged_plan(recv_cnt, local_e, R, RAGGED_BLOCK)
+            buf = dispatch_rows(rows, plan_r.slots, R,
+                                total_rows=plan_r.total_rows,
+                                use_pallas=use_pallas, interpret=interpret)
             h = ragged_expert_ffn(buf, w1, w3, w2, plan_r.block_to_expert,
                                   plan_r.total_rows, block_m=RAGGED_BLOCK,
                                   use_pallas=use_pallas, interpret=interpret)
-            back = dsp.gather_rows_flat(h, plan_r.slots)
+            back = combine_rows(h, plan_r.slots, None, plan_r.total_rows,
+                                use_pallas=use_pallas, interpret=interpret)
             back = back.reshape(peers, cap_send, d)
             drops_e = plan_r.drops
         else:
-            plan_e = dsp.make_plan(local_e[:, None], e_local + 1, cap_recv)
-            buf = dsp.scatter_rows(rows, plan_e, e_local + 1, cap_recv)
-            h = expert_ffn(buf[:e_local], w1, w3, w2, use_pallas=use_pallas,
-                           interpret=interpret)
-            h = jnp.concatenate([h, jnp.zeros((1,) + h.shape[1:], h.dtype)],
-                                axis=0)
-            back = dsp.gather_rows(h, plan_e).reshape(peers, cap_send, d)
-            # overflow in the padding (invalid-row) group is not a real drop
-            drops_e = jnp.sum((plan_e.slots.reshape(-1) == -1) & valid)
+            # (E_local, cap_recv) layout is flat (E_local*cap_recv, d) to
+            # the dispatch kernels (occupancy is not a prefix here, so no
+            # total_rows predication — only the -1-slot masking applies)
+            plan_e = dsp.recv_expert_plan(recv_cnt, local_e, cap_recv)
+            buf = dispatch_rows(rows, plan_e.slots, e_local * cap_recv,
+                                use_pallas=use_pallas, interpret=interpret)
+            h = expert_ffn(buf.reshape(e_local, cap_recv, d), w1, w3, w2,
+                           use_pallas=use_pallas, interpret=interpret)
+            back = combine_rows(h.reshape(e_local * cap_recv, d),
+                                plan_e.slots, use_pallas=use_pallas,
+                                interpret=interpret)
+            back = back.reshape(peers, cap_send, d)
+            drops_e = plan_e.drops
         # ---- combine: return rows to their senders, weight, reduce --------
         recv_back = lax.all_to_all(back, ep_axis, 0, 0, tiled=True)
-        y = dsp.gather_rows(recv_back, plan_s, r.weights)          # (t_c, d)
+        y = combine_rows(recv_back.reshape(peers * cap_send, d),
+                         uplan.send_slots, r.weights,
+                         use_pallas=use_pallas, interpret=interpret)
         stats = {
             "aux_loss": lax.pmean(r.aux_loss, all_axes),
             "load": lax.psum(r.load.astype(jnp.float32), all_axes),
-            "drops": lax.psum((plan_s.drops + drops_e).astype(jnp.float32),
+            "drops": lax.psum((uplan.drops + drops_e).astype(jnp.float32),
                               all_axes),
         }
         return y, stats
@@ -128,7 +142,7 @@ def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
         ragged=ragged, interpret=interpret)
     x_spec = P(tuple(batch_axes), ep_axis, None)
     stats_spec = {"aux_loss": P(), "load": P(None), "drops": P()}
-    return jax.shard_map(
+    return shard_map(
         fn, mesh=mesh,
         in_specs=(x_spec, P(None, None), P(None),
                   P(ep_axis, None, None), P(ep_axis, None, None),

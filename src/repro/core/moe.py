@@ -1,6 +1,6 @@
 """The MemFine MoE layer: router + FCDA chunking + selectable expert strategy.
 
-Strategies (DESIGN.md §2):
+Strategies (docs/DESIGN.md §2):
   * ``ep_shardmap`` — experts sharded over the model axis, explicit
     all-to-all dispatch/combine per chunk (core/ep.py).  Requires the expert
     count, batch and sequence to divide the mesh axes.
@@ -112,7 +112,15 @@ def _moe_ffn_rows(params: dict, x: jax.Array, cfg: MoEConfig,
                 cap = dsp.dropless_capacity(t_c)
             else:
                 cap = dsp.balanced_capacity(t_c, k, E, cfg.capacity_factor)
-            plan = dsp.make_plan(r.expert_idx, E, cap)
+            # single-sort planner (num_peers=1: the expert layout IS the
+            # device layout) — same plan the EP path derives per chunk.
+            # Dispatch stays on the jnp scatter here: this path is vmapped
+            # over batch rows and the Pallas dispatch kernels want the
+            # un-vmapped flat layout (the EP path is where chunked dispatch
+            # overhead actually bites); the expert FFN honors use_pallas.
+            uplan = dsp.make_unified_plan(r.expert_idx, E, 1, cap_expert=cap)
+            plan = dsp.DispatchPlan(uplan.expert_slots, uplan.expert_load,
+                                    uplan.drops_expert)
             buf = dsp.scatter_rows(xc, plan, E, cap)
             h = expert_ffn(buf, params["w1"], params["w3"], params["w2"],
                            use_pallas=ctx.use_pallas)
@@ -164,7 +172,23 @@ def _shared_expert(params: dict, x: jax.Array) -> jax.Array:
 
 
 def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, ctx: DistContext):
-    """x: (B, S, d) -> (y, stats).  stats: aux_loss (scalar), load (E,), drops."""
+    """x: (B, S, d) -> (y, stats).
+
+    Stats contract (identical across strategies, asserted by
+    tests/test_moe_stats.py):
+
+    * ``load``  — (E,) float32, the TOTAL routed token-slot demand per expert
+      for the whole step (pre-capacity-clip), summed over batch rows, chunks
+      and devices — never a per-row or per-chunk mean.
+    * ``drops`` — float32 scalar, the TOTAL token-slots dropped this step
+      (send-side peer-capacity + receive-side expert-capacity on the EP
+      path); exactly 0.0 under ``capacity_mode="dropless"``.
+    * ``aux_loss`` — float32 scalar, the MEAN per-chunk Switch auxiliary
+      loss (averaged over chunks and over whatever granularity routed
+      independently: EP devices for ep_shardmap, batch rows for tp_gspmd —
+      aux is nonlinear, so these can differ across strategies even though
+      load/drops match exactly).
+    """
     strategy = resolve_strategy(cfg, x.shape, ctx)
     if strategy == "ep_shardmap":
         y, stats = moe_ffn_ep(params, x, cfg, ctx.mesh,

@@ -7,7 +7,7 @@ per-step from a counter-derived seed: fully deterministic, resumable from a
 checkpointed step, and shardable (each host could generate only its slice —
 here one host generates all and jax.device_put shards).
 
-Modality stubs (DESIGN.md carve-out): VLM patch embeddings and audio frame
+Modality stubs (docs/DESIGN.md carve-out): VLM patch embeddings and audio frame
 embeddings are deterministic pseudo-features of the right shape.
 """
 

@@ -1,11 +1,12 @@
 """Logical sharding rules -> NamedShardings, divisibility-guarded.
 
-Rules (DESIGN.md §5): vocab/heads/d_ff/experts shard over ``model``;
+Rules (docs/DESIGN.md §5): vocab/heads/d_ff/experts shard over ``model``;
 batch over ``("pod","data")``; long-context decode caches shard their
 *sequence* dim over the data axes instead (batch=1).  Any dim that does not
-divide its axis is replicated — recorded per arch in EXPERIMENTS.md so the
-roofline table can call out the fallbacks (e.g. mixtral's 8 experts on a
-16-wide axis, whisper's 51865 vocab).
+divide its axis is replicated — exercised per arch by
+tests/test_sharding_rules.py (docs/DESIGN.md §5) so the roofline table can
+call out the fallbacks (e.g. mixtral's 8 experts on a 16-wide axis,
+whisper's 51865 vocab).
 """
 
 from __future__ import annotations
@@ -112,6 +113,9 @@ def cache_pspec(mesh: Mesh, leaf_shape: tuple, batch: int) -> P:
     largest (sequence) dim — the single-sequence long-context case."""
     ba = batch_axes(mesh)
     n = axis_size(mesh, ba)
+    # normalise singleton axis tuples to bare names (new jax does this inside
+    # PartitionSpec; old jax keeps the 1-tuple, breaking == comparisons)
+    ba = ba[0] if isinstance(ba, tuple) and len(ba) == 1 else ba
     dims: list = [None] * len(leaf_shape)
     if n <= 1 or not leaf_shape:
         return P(*dims)

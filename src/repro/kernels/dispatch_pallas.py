@@ -1,0 +1,146 @@
+"""Token dispatch/combine as Pallas TPU kernels (docs/DESIGN.md §Dispatch).
+
+The jnp path materialises dispatch buffers with ``jnp.zeros().at[idx].add``,
+which XLA lowers to serialized scatters on TPU — per-chunk overhead that
+grows linearly with the FCDA chunk count.  These kernels drive the same data
+movement with scalar-prefetched index maps instead:
+
+* ``scatter_rows``  — build the (R, d) dispatch buffer.  The planner's slot
+  map is inverted once (``core/dispatch.py::invert_slots``) so the scatter
+  becomes a per-output-row *gather*: row r copies source row ``src[r]``
+  (src is SMEM-prefetched, the copy is a dynamic-sublane VMEM slice).
+  Row-blocks past ``total_rows`` are predicated off entirely, mirroring
+  ``ragged_mlp.py``'s live-block trick: with the MegaBlocks-style flat
+  layout the occupied rows form a prefix, so issued copies scale with the
+  actual routed load, not the dropless worst case.
+* ``gather_combine`` — the exact transpose: token t sums its K slot rows,
+  weighted by the router combine weights.
+
+Combine is the transpose of dispatch, so the backward of each is the other
+kernel (kernels/ops.py wires the custom VJP); no autodiff'd scatter and no
+``(G, cap, d)`` residual appears in the backward graph.
+
+Both source arrays are kept whole in VMEM (BlockSpec over the full array):
+FCDA chunking bounds T per chunk, so the source fits comfortably; the grid
+only tiles the output rows.  Validated bit-for-bit against kernels/ref.py in
+interpret mode; the CPU/dry-run path keeps the jnp reference.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _blocks(dim: int, preferred: int) -> int:
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return max(b, 1)
+
+
+def _scatter_kernel(src_ref, rows_ref, x_ref, w_ref, o_ref, *, bm: int):
+    """One (bm, d) output block: row r <- w[r] * x[src[base+r]] (0 if empty)."""
+    base = pl.program_id(0) * bm
+    live = base < rows_ref[0]
+
+    @pl.when(jnp.logical_not(live))
+    def _dead():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(live)
+    def _copy():
+        def body(r, _):
+            s = src_ref[base + r]
+            row = x_ref[pl.ds(jnp.maximum(s, 0), 1), :].astype(jnp.float32)
+            w = w_ref[pl.ds(r, 1), :].astype(jnp.float32)       # (1, 1)
+            row = jnp.where(s >= 0, row * w, 0.0)
+            o_ref[pl.ds(r, 1), :] = row.astype(o_ref.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, bm, body, 0)
+
+
+def scatter_rows(x: jax.Array, src: jax.Array, total_rows,
+                 weights: jax.Array | None = None, *, block_m: int = 8,
+                 interpret: bool = False) -> jax.Array:
+    """x: (T, d) tokens; src: (R,) int32 source-row map (-1 = empty slot)
+    -> (R, d) dispatch buffer.  ``weights``: optional per-slot scale (R,)
+    (used by the combine-backward, where the router weight rides along).
+    Row-blocks past ``total_rows`` are skipped (predicated off)."""
+    T, d = x.shape
+    R = src.shape[0]
+    bm = _blocks(R, block_m)
+    if weights is None:
+        weights = jnp.ones((R,), x.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(R // bm,),
+        in_specs=[
+            pl.BlockSpec((T, d), lambda i, src, rows: (0, 0)),   # full source
+            pl.BlockSpec((bm, 1), lambda i, src, rows: (i, 0)),  # slot weights
+        ],
+        out_specs=pl.BlockSpec((bm, d), lambda i, src, rows: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_scatter_kernel, bm=bm),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        interpret=interpret,
+    )(src.astype(jnp.int32), jnp.asarray(total_rows, jnp.int32).reshape(1),
+      x, weights.reshape(R, 1))
+
+
+def _gather_kernel(slots_ref, buf_ref, w_ref, o_ref, *, bt: int, K: int):
+    """One (bt, d) output block: token t sums its K weighted slot rows.
+
+    Accumulates in float32.  The backend may FMA-contract the per-slot
+    multiply into the accumulate; results agree with ref.py bit-for-bit
+    whenever the arithmetic is exact and to ~1 ulp otherwise (the parity
+    tests exercise both regimes).
+    """
+    base = pl.program_id(0) * bt
+    d = o_ref.shape[1]
+
+    def body(r, _):
+        acc = jnp.zeros((1, d), jnp.float32)
+        for k in range(K):                                  # K is small, static
+            s = slots_ref[(base + r) * K + k]
+            row = buf_ref[pl.ds(jnp.maximum(s, 0), 1), :].astype(jnp.float32)
+            wk = w_ref[pl.ds(r, 1), pl.ds(k, 1)].astype(jnp.float32)  # (1, 1)
+            acc = acc + jnp.where(s >= 0, row * wk, 0.0)
+        o_ref[pl.ds(r, 1), :] = acc.astype(o_ref.dtype)
+        return 0
+
+    jax.lax.fori_loop(0, bt, body, 0)
+
+
+def gather_combine(buf: jax.Array, slots: jax.Array,
+                   weights: jax.Array | None = None, *, block_t: int = 8,
+                   interpret: bool = False) -> jax.Array:
+    """buf: (R, d); slots: (T, K) int32 (-1 = dropped) -> (T, d), each token
+    the weighted sum of its K slot rows (the transpose of scatter_rows)."""
+    R, d = buf.shape
+    T, K = slots.shape
+    bt = _blocks(T, block_t)
+    if weights is None:
+        weights = jnp.ones((T, K), buf.dtype)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(T // bt,),
+        in_specs=[
+            pl.BlockSpec((R, d), lambda i, slots: (0, 0)),       # full buffer
+            pl.BlockSpec((bt, K), lambda i, slots: (i, 0)),      # combine wts
+        ],
+        out_specs=pl.BlockSpec((bt, d), lambda i, slots: (i, 0)),
+    )
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, bt=bt, K=K),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), buf.dtype),
+        interpret=interpret,
+    )(slots.reshape(-1).astype(jnp.int32), buf, weights.astype(buf.dtype))

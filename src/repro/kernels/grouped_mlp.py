@@ -1,6 +1,6 @@
 """Pallas TPU kernels: grouped (per-expert) blocked matmul and fused SwiGLU.
 
-TPU adaptation of the expert-FFN hot spot (DESIGN.md §6): the dispatched
+TPU adaptation of the expert-FFN hot spot (docs/DESIGN.md §6): the dispatched
 buffer (E, C, d) is contracted against stacked expert weights with a
 (E, C/bm, N/bn, K/bk) grid.  The K loop is innermost so the (bm, bn) output
 tile stays resident in VMEM (revisited across k steps) and accumulates in

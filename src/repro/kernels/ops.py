@@ -13,9 +13,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.kernels import dispatch_pallas as dp
 from repro.kernels import ref
 from repro.kernels.grouped_mlp import grouped_matmul, grouped_swiglu
 from repro.kernels.ragged_mlp import ragged_matmul, ragged_swiglu
+
+
+def _f0(v):
+    return np.zeros(v.shape, jax.dtypes.float0)
 
 
 def expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, *,
@@ -36,6 +41,118 @@ def expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array, *,
     for _ in range(x.ndim - 3):
         fn = jax.vmap(fn)
     return fn(x)
+
+
+# ---------------------------------------------------------------------------
+# dispatch / combine with a transpose-symmetric custom VJP
+#
+# Combine is the exact transpose of dispatch, so instead of letting autodiff
+# transpose a scatter (serialized scatter HLO + a (G, cap, d) residual graph),
+# dispatch-backward *calls the combine kernel* and combine-backward *calls the
+# dispatch kernel*; the router-weight grad is a segment dot.  The only arrays
+# saved for backward are the int32 index maps (and, for combine, its own
+# primal inputs) — no dispatch buffer survives autodiff.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def _dispatch_k(x, slots, src, block_m, interpret):
+    # slots is residual-only (consumed by the backward gather)
+    return dp.scatter_rows(x, src, src.shape[0], block_m=block_m,
+                           interpret=interpret)
+
+
+def _dispatch_fwd(x, slots, src, block_m, interpret):
+    return _dispatch_k(x, slots, src, block_m, interpret), (slots, src)
+
+
+def _dispatch_bwd(block_m, interpret, res, g):
+    slots, src = res
+    # transpose of scatter = gather: dx[t] = sum_k g[slot[t, k]]
+    dx = dp.gather_combine(g, slots, None, block_t=block_m,
+                           interpret=interpret)
+    return dx, _f0(slots), _f0(src)
+
+
+_dispatch_k.defvjp(_dispatch_fwd, _dispatch_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4, 5))
+def _combine_k(buf, slots, weights, total_rows, block_t, interpret):
+    return dp.gather_combine(buf, slots, weights, block_t=block_t,
+                             interpret=interpret)
+
+
+def _combine_fwd(buf, slots, weights, total_rows, block_t, interpret):
+    y = _combine_k(buf, slots, weights, total_rows, block_t, interpret)
+    return y, (buf, slots, weights, total_rows)
+
+
+def _combine_bwd(block_t, interpret, res, g):
+    buf, slots, weights, total_rows = res
+    T, K = slots.shape
+    R = buf.shape[0]
+    from repro.core.dispatch import invert_slots
+    # transpose of gather = scatter, with the combine weight riding along:
+    # dbuf[r] = w_flat[pos(r)] * g[token(r)].  With a prefix layout
+    # (ragged), total_rows predicates off the dead row-blocks.
+    pos = invert_slots(slots, R)                           # (R,) flat (t*K+k)
+    src_tok = jnp.where(pos >= 0, pos // K, -1)
+    wslot = jnp.where(
+        pos >= 0, jnp.take(weights.reshape(-1), jnp.maximum(pos, 0)), 0)
+    dbuf = dp.scatter_rows(g, src_tok, total_rows, wslot, block_m=block_t,
+                           interpret=interpret)
+    # weight grad via a segment dot: dw[t,k] = <g[t], buf[slot[t,k]]>
+    rows = jnp.take(buf, jnp.maximum(slots, 0), axis=0)    # (T, K, d)
+    dw = jnp.einsum("td,tkd->tk", g.astype(jnp.float32),
+                    rows.astype(jnp.float32))
+    dw = jnp.where(slots >= 0, dw, 0.0).astype(weights.dtype)
+    return dbuf, _f0(slots), dw, _f0(total_rows)
+
+
+_combine_k.defvjp(_combine_fwd, _combine_bwd)
+
+
+def dispatch_rows(x: jax.Array, slots: jax.Array, rows: int,
+                  total_rows=None, *, use_pallas: bool = False,
+                  interpret: bool = False, block_m: int = 8) -> jax.Array:
+    """Build the (rows, d) dispatch buffer from x (T, d) and the planner's
+    slot map (T, K).  Pallas path: scalar-prefetched gather-formulated
+    scatter with row-block predication past ``total_rows`` and a custom VJP
+    whose backward is the combine kernel."""
+    if not use_pallas:
+        from repro.core.dispatch import scatter_rows_flat
+        return scatter_rows_flat(x, slots, rows)
+    from repro.core.dispatch import invert_slots
+    K = slots.shape[1]
+    pos = invert_slots(slots, rows)
+    src_tok = jnp.where(pos >= 0, pos // K, -1)
+    if total_rows is not None:
+        # predication hint: with a prefix layout, blocks past the routed load
+        # are skipped entirely (issued copies track the ACTUAL load)
+        src_tok = jnp.where(jnp.arange(rows) < jnp.asarray(total_rows),
+                            src_tok, -1)
+    return _dispatch_k(x, slots, src_tok, block_m, interpret)
+
+
+def combine_rows(buf: jax.Array, slots: jax.Array,
+                 weights: jax.Array | None = None, total_rows=None, *,
+                 use_pallas: bool = False, interpret: bool = False,
+                 block_t: int = 8) -> jax.Array:
+    """Inverse of dispatch_rows: (rows, d) -> (T, d), each token the weighted
+    sum of its K slot rows.  Pallas path: gather kernel with a custom VJP
+    whose backward is the dispatch kernel (+ segment dot for the weights);
+    pass ``total_rows`` for prefix (ragged) layouts so the backward scatter
+    predicates off dead row-blocks."""
+    if not use_pallas:
+        from repro.core.dispatch import gather_rows_flat
+        return gather_rows_flat(buf, slots, weights)
+    T, K = slots.shape
+    if weights is None:
+        weights = jnp.ones((T, K), buf.dtype)
+    total = jnp.asarray(buf.shape[0] if total_rows is None else total_rows,
+                        jnp.int32)
+    return _combine_k(buf, slots, weights, total, block_t, interpret)
 
 
 def _segment_outer(a: jax.Array, b: jax.Array, b2e: jax.Array,
@@ -92,8 +209,7 @@ def _ragged_ffn_bwd(block_m, interpret, res, gy):
     dw1 = _segment_outer(x, dh1, b2e, E).astype(w1.dtype)
     dw3 = _segment_outer(x, dh3, b2e, E).astype(w3.dtype)
     dw2 = _segment_outer(a, gy, b2e, E).astype(w2.dtype)
-    f0 = lambda v: np.zeros(v.shape, jax.dtypes.float0)
-    return dx, dw1, dw3, dw2, f0(b2e), f0(rows)
+    return dx, dw1, dw3, dw2, _f0(b2e), _f0(rows)
 
 
 _ragged_ffn_kernel.defvjp(_ragged_ffn_fwd, _ragged_ffn_bwd)

@@ -72,3 +72,38 @@ def ragged_expert_ffn_ref(x: jax.Array, w1, w3, w2, block_to_expert,
                           total_rows) -> jax.Array:
     h = ragged_swiglu_ref(x, w1, w3, block_to_expert, total_rows)
     return ragged_matmul_ref(h, w2, block_to_expert, total_rows)
+
+
+# ---------------------------------------------------------------------------
+# dispatch/combine — oracles for kernels/dispatch_pallas.py (same float32
+# accumulate-then-cast discipline, so interpret-mode parity is bit-for-bit)
+# ---------------------------------------------------------------------------
+
+def scatter_rows_ref(x: jax.Array, src: jax.Array, total_rows,
+                     weights: jax.Array | None = None) -> jax.Array:
+    """x: (T, d), src: (R,) source-row map (-1 = empty) -> (R, d)."""
+    R = src.shape[0]
+    rows = jnp.take(x, jnp.maximum(src, 0), axis=0).astype(jnp.float32)
+    if weights is not None:
+        rows = rows * weights[:, None].astype(jnp.float32)
+    live = (src >= 0) & (jnp.arange(R) < jnp.asarray(total_rows))
+    return jnp.where(live[:, None], rows, 0.0).astype(x.dtype)
+
+
+def gather_combine_ref(buf: jax.Array, slots: jax.Array,
+                       weights: jax.Array | None = None) -> jax.Array:
+    """buf: (R, d), slots: (T, K) (-1 = dropped) -> (T, d) weighted K-sum.
+
+    Accumulates slot-by-slot in float32 with a masked add per k — the same
+    expression the kernel evaluates per row.  Parity with the kernel is
+    bit-for-bit whenever the arithmetic is exact (the backend is free to
+    FMA-contract either side, which only matters in the last ulp)."""
+    T, K = slots.shape
+    acc = jnp.zeros((T, buf.shape[1]), jnp.float32)
+    for k in range(K):
+        s = slots[:, k]
+        row = jnp.take(buf, jnp.maximum(s, 0), axis=0).astype(jnp.float32)
+        if weights is not None:
+            row = row * weights[:, k, None].astype(jnp.float32)
+        acc = acc + jnp.where((s >= 0)[:, None], row, 0.0)
+    return acc.astype(buf.dtype)

@@ -13,7 +13,7 @@ Usage:
   PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
 
 Per combo it writes JSON with memory_analysis, cost_analysis, the collective
-schedule and the roofline terms (EXPERIMENTS.md §Dry-run / §Roofline read
+schedule and the roofline terms (docs/DESIGN.md §Dry-run / §Roofline read
 these).
 """
 

@@ -25,6 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro import compat
 from repro.configs.base import (InputShape, ModelConfig, SHAPES, TPU_V5E,
                                 get_config, long_context_eligible)
 from repro.core.mact import MACTController
@@ -92,7 +93,7 @@ def build_context(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
                   chunks: Optional[int] = None, use_pallas: bool = False,
                   strategy: str = "auto",
                   flags: Optional[dict] = None) -> tuple[ModelConfig, DistContext]:
-    """``flags`` are the beyond-paper optimization knobs (EXPERIMENTS.md §Perf):
+    """``flags`` are the beyond-paper optimization knobs (docs/DESIGN.md §Perf):
       seq_shard_acts   — shard inter-layer activations (B,S,d) on S over
                          'model' (sequence parallelism; cuts stored-x memory
                          and turns TP all-reduces into RS/AG pairs)
@@ -239,7 +240,7 @@ def lower_combo(arch: str, shape_name: str, mesh: Mesh, *,
     shape = SHAPES[shape_name]
     if shape.name == "long_500k" and not long_context_eligible(cfg):
         raise SkipCombo(f"{arch} is full-attention — long_500k skipped "
-                        f"(DESIGN.md §4)")
+                        f"(docs/DESIGN.md §4)")
     cfg, ctx = build_context(cfg, shape, mesh, chunks=chunks, strategy=strategy,
                              flags=flags)
     meta = {"arch": arch, "shape": shape_name, "mode": shape.mode,
@@ -247,7 +248,7 @@ def lower_combo(arch: str, shape_name: str, mesh: Mesh, *,
             "flags": dict(flags or {}),
             "dtype": str(dtype.__name__ if hasattr(dtype, '__name__') else dtype)}
 
-    with jax.set_mesh(mesh):
+    with compat.set_mesh(mesh):
         if shape.mode == "train":
             state_abs, batch_abs = abstract_train_args(cfg, shape, mesh, dtype,
                                                        flags=flags)
@@ -293,10 +294,12 @@ def analyse(lowered, compiled, hw=TPU_V5E, chips: int = 1) -> dict:
     from repro.launch import hlo_analysis
     ma = compiled.memory_analysis()
     ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):       # old jax: one dict per device
+        ca = ca[0] if ca else {}
     txt = compiled.as_text()
     coll = collective_bytes(txt)
     # scan-aware re-derivation: cost_analysis counts while bodies ONCE, which
-    # under-reports layer-scanned models by the trip count (DESIGN.md §7)
+    # under-reports layer-scanned models by the trip count (docs/DESIGN.md §7)
     scan = hlo_analysis.analyse_module(txt)
     flops = float(scan["flops"]) or float(ca.get("flops", 0.0))
     bytes_acc = float(scan["hbm_bytes"]) or float(ca.get("bytes accessed", 0.0))

@@ -1,6 +1,6 @@
 """One transformer layer: mixer (attention | mamba) + FFN (dense | MoE | none).
 
-Remat policy (DESIGN.md §2):
+Remat policy (docs/DESIGN.md §2):
   * "none"    — store everything (m_g copies in the memory model).
   * "full"    — jax.checkpoint around the whole layer = Megatron full
                 recomputation (paper Method 1 when moe_chunks=1).

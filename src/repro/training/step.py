@@ -2,7 +2,7 @@
 
 ``make_train_step(cfg, ctx, ...)`` closes over a *static* FCDA chunk count
 (XLA requires it); the MACT trainer keeps one compiled step per chunk bin and
-switches between them from the router-load feedback (DESIGN.md §2).
+switches between them from the router-load feedback (docs/DESIGN.md §2).
 """
 
 from __future__ import annotations

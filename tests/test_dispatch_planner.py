@@ -1,0 +1,180 @@
+"""Single-sort dispatch planner: exactly ONE stable argsort per chunk on the
+EP path, with plans equivalent to the old two-sort construction
+(make_plan on the device key + make_ragged_plan on the received rows)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import dispatch as dsp
+
+
+def _count_sorts(fn, *args):
+    """Number of `sort` primitives anywhere in fn's jaxpr (argsort lowers to
+    sort; cumsum/scatter/searchsorted do not)."""
+    n = 0
+
+    def walk(jaxpr):
+        nonlocal n
+        for eq in jaxpr.eqns:
+            if eq.primitive.name == "sort":
+                n += 1
+            for sub in eq.params.values():
+                if hasattr(sub, "jaxpr"):
+                    walk(sub.jaxpr)
+
+    walk(jax.make_jaxpr(fn)(*args).jaxpr)
+    return n
+
+
+def _distinct_topk(rng, T, E, K):
+    return np.stack([rng.permutation(E)[:K] for _ in range(T)]).astype(np.int32)
+
+
+def test_planner_is_single_sort():
+    """The whole per-chunk planning chain — sender plan AND both receiver
+    plans — contains exactly one sort; the old pair contained two."""
+    T, E, P, K = 16, 8, 4, 2
+    e_local = E // P
+    cap_send = T * min(K, e_local)
+    idx = jnp.asarray(_distinct_topk(np.random.default_rng(0), T, E, K))
+    counts = jnp.ones((P, e_local), jnp.int32)
+    eid = jnp.zeros((P * cap_send,), jnp.int32)
+
+    def new_path(idx, counts, eid):
+        up = dsp.make_unified_plan(idx, E, P, cap_send=cap_send)
+        pr = dsp.recv_ragged_plan(counts, eid, 256, 8)
+        pe = dsp.recv_expert_plan(counts, eid, 64)
+        return up, pr, pe
+
+    def old_path(idx, eid):
+        p1 = dsp.make_plan(idx // e_local, P, cap_send)
+        p2 = dsp.make_ragged_plan(eid[:, None], e_local, 256, 8)
+        return p1, p2
+
+    assert _count_sorts(new_path, idx, counts, eid) == 1
+    assert _count_sorts(old_path, idx, eid) == 2
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_send_plan_equivalent_to_make_plan(seed):
+    rng = np.random.default_rng(seed)
+    T = int(rng.integers(1, 33))
+    E = int(rng.choice([2, 4, 8]))
+    P = int(rng.choice([p for p in (1, 2, 4) if E % p == 0]))
+    K = int(rng.integers(1, min(4, E) + 1))
+    e_local = E // P
+    idx = _distinct_topk(rng, T, E, K)
+    cap_send = T * min(K, e_local)
+
+    up = dsp.make_unified_plan(jnp.asarray(idx), E, P, cap_send=cap_send,
+                               cap_expert=T)
+    old = dsp.make_plan(jnp.asarray(idx) // e_local, P, cap_send)
+
+    # same drops (0 at dropless capacity), same per-peer loads
+    assert int(up.drops) == int(old.drops) == 0
+    np.testing.assert_array_equal(np.asarray(up.peer_load),
+                                  np.asarray(old.load))
+    # same grouping: every token-slot lands in its target peer's block
+    slots = np.asarray(up.send_slots)
+    assert (slots // cap_send == idx // e_local).all()
+    # no slot collisions
+    flat = slots.reshape(-1)
+    assert len(np.unique(flat[flat >= 0])) == (flat >= 0).sum()
+    # the expert-layout read-out is IDENTICAL to the old expert-key plan
+    # (same sort key, same tie-breaking)
+    olde = dsp.make_plan(jnp.asarray(idx), E, T)
+    np.testing.assert_array_equal(np.asarray(up.expert_slots),
+                                  np.asarray(olde.slots))
+    np.testing.assert_array_equal(np.asarray(up.expert_load),
+                                  np.asarray(olde.load))
+    # counts matrix == per-(peer, local expert) demand
+    cnt = np.zeros((P, e_local), np.int64)
+    for e in idx.reshape(-1):
+        cnt[e // e_local, e % e_local] += 1
+    np.testing.assert_array_equal(np.asarray(up.counts), cnt)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_recv_plans_equivalent_to_ragged_plan(seed):
+    """Receiver-side plans built from the counts matrix (no sort) are
+    equivalent to make_plan/make_ragged_plan over the received rows."""
+    rng = np.random.default_rng(100 + seed)
+    P = int(rng.choice([1, 2, 4]))
+    e_local = int(rng.choice([1, 2, 4]))
+    cap_send = int(rng.integers(2, 12))
+    # received blocks: per-source expert-sorted prefix (the sender invariant)
+    recv_eid = np.full((P, cap_send), -1, np.int32)
+    counts = np.zeros((P, e_local), np.int32)
+    for p in range(P):
+        n = int(rng.integers(0, cap_send + 1))
+        eids = np.sort(rng.integers(0, e_local, n)).astype(np.int32)
+        recv_eid[p, :n] = eids
+        for e in eids:
+            counts[p, e] += 1
+    flat_eid = recv_eid.reshape(-1)
+    valid = flat_eid >= 0
+
+    # ragged layout vs make_ragged_plan
+    bm = 4
+    R = P * cap_send + e_local * bm
+    R = -(-R // bm) * bm
+    new = dsp.recv_ragged_plan(jnp.asarray(counts), jnp.asarray(flat_eid),
+                               R, bm)
+    old = dsp.make_ragged_plan(
+        jnp.asarray(np.where(valid, flat_eid, e_local)[:, None]), e_local, R,
+        bm, valid=jnp.asarray(valid[:, None]))
+    np.testing.assert_array_equal(np.asarray(new.load), np.asarray(old.load))
+    assert int(new.total_rows) == int(old.total_rows)
+    np.testing.assert_array_equal(np.asarray(new.block_to_expert),
+                                  np.asarray(old.block_to_expert))
+    assert int(new.drops) == int(old.drops) == 0
+    s = np.asarray(new.slots).reshape(-1)
+    assert ((s >= 0) == valid).all()
+    assert len(np.unique(s[s >= 0])) == (s >= 0).sum()
+    # every valid row lands inside its expert's aligned span
+    starts = np.concatenate([[0], np.cumsum(-(-counts.sum(0) // bm) * bm)])
+    for r in np.flatnonzero(valid):
+        e = flat_eid[r]
+        assert starts[e] <= s[r] < starts[e + 1]
+
+    # per-expert (E_local, cap) layout
+    cap = P * cap_send
+    pe = dsp.recv_expert_plan(jnp.asarray(counts), jnp.asarray(flat_eid), cap)
+    np.testing.assert_array_equal(np.asarray(pe.load), counts.sum(0))
+    assert int(pe.drops) == 0
+    se = np.asarray(pe.slots).reshape(-1)
+    assert ((se >= 0) == valid).all()
+    assert (se[valid] // cap == flat_eid[valid]).all()
+    assert len(np.unique(se[valid])) == valid.sum()
+
+
+def test_capacity_drop_counts_match_old_path():
+    """Under an undersized capacity the drop COUNTS match the two-sort path
+    (which token-slots drop may differ — both clip per group)."""
+    rng = np.random.default_rng(7)
+    T, E, P, K = 32, 8, 4, 2
+    e_local = E // P
+    idx = _distinct_topk(rng, T, E, K)
+    cap_send = 6
+    up = dsp.make_unified_plan(jnp.asarray(idx), E, P, cap_send=cap_send)
+    old = dsp.make_plan(jnp.asarray(idx) // e_local, P, cap_send)
+    assert int(up.drops) == int(old.drops) > 0
+    # counts reflect the post-clip packing, bounded by cap_send per peer
+    assert (np.asarray(up.counts).sum(1) <= cap_send).all()
+    assert np.asarray(up.counts).sum() == T * K - int(up.drops)
+
+
+def test_roundtrip_through_unified_plan():
+    """scatter -> gather through the unified expert layout reproduces k*x
+    with unit weights (identity experts)."""
+    rng = np.random.default_rng(3)
+    T, E, K = 24, 4, 2
+    idx = _distinct_topk(rng, T, E, K)
+    x = jnp.asarray(rng.standard_normal((T, 8)), jnp.float32)
+    up = dsp.make_unified_plan(jnp.asarray(idx), E, 1, cap_expert=T)
+    plan = dsp.DispatchPlan(up.expert_slots, up.expert_load, up.drops_expert)
+    buf = dsp.scatter_rows(x, plan, E, T)
+    y = dsp.gather_rows(buf, plan, jnp.ones((T, K), jnp.float32))
+    np.testing.assert_allclose(np.asarray(y), np.asarray(x) * K, atol=1e-5)

@@ -61,6 +61,7 @@ def test_collectives_counted_with_trips():
         import jax, jax.numpy as jnp
         from jax.sharding import NamedSharding, PartitionSpec as P
         from repro.launch import hlo_analysis as H
+        from repro.compat import set_mesh
         mesh = jax.make_mesh((4,), ('m',))
         def f(x):
             def body(c, _):
@@ -71,7 +72,7 @@ def test_collectives_counted_with_trips():
             return y.sum()
         xs = jax.ShapeDtypeStruct((16, 64), jnp.float32,
                                   sharding=NamedSharding(mesh, P('m', None)))
-        with jax.set_mesh(mesh):
+        with set_mesh(mesh):
             txt = jax.jit(f).lower(xs).compile().as_text()
         r = H.analyse_module(txt)
         print('COLL', r['collective_total'])

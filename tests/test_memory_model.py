@@ -13,7 +13,7 @@ from repro.core.mact import MACTController
 
 # Paper §5 experimental setup: t=1, p=4, e=32, d=1, c=1, b=1, s=4096, bf16.
 PAPER_PAR = mm.Parallelism(t=1, p=4, c=1, e=32, d=1, b=1)
-# DESIGN.md calibration: the s'' behind the paper's 22.9 GB activation figure.
+# docs/DESIGN.md calibration: the s'' behind the paper's 22.9 GB activation figure.
 CALIBRATED_S_PP = 5.97e5
 
 
