@@ -6,14 +6,51 @@ Backward (Eq. 7): each chunk is recomputed independently — expressed here as
 ``jax.checkpoint`` around the chunk body under a sequential ``lax.scan``, so
 both the live dispatch buffers and the saved residuals scale with one chunk,
 not the whole token set.  Peak MoE activation drops by (c-1)/c (docs/DESIGN.md §2).
+
+``chunked_pipeline`` is the overlapped variant (docs/DESIGN.md §Pipeline): the
+chunk body is split into explicit stages so consecutive chunks' communication
+and compute are mutually data-independent, and chunk liveness is bounded to a
+pipeline ``depth`` with ordering barriers instead of a sequential loop.  The
+throughput/memory trade is one extra chunk's dispatch buffers live — the
+second axis MACT tunes (core/mact.py).
 """
 
 from __future__ import annotations
 
-from typing import Callable
+from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
+from jax import lax
+
+
+class ChunkStages(NamedTuple):
+    """The FCDA chunk body split at its communication boundaries.
+
+    ``dispatch``: (chunk_tokens, ...) -> in-flight pytree.  Routing, dispatch
+      planning and the dispatch all-to-all; its output is exactly the state
+      that stays live while the chunk waits on expert compute.
+    ``compute``: in-flight pytree -> computed pytree.  The expert FFN on the
+      received rows (plus pass-through of whatever combine needs).
+    ``combine``: computed pytree -> (y_chunk, stats pytree).  The combine
+      all-to-all and the weighted reduction back to token order.
+
+    Splitting here (rather than a monolithic chunk_fn) is what lets the
+    pipelined schedule issue chunk i+1's dispatch all-to-all while chunk i's
+    FFN computes and chunk i-1's combine all-to-all drains: the three calls
+    in flight touch disjoint state, so the compiler's latency-hiding
+    scheduler may overlap them.
+    """
+    dispatch: Callable
+    compute: Callable
+    combine: Callable
+
+
+def compose(stages: ChunkStages) -> Callable:
+    """The sequential chunk body: combine(compute(dispatch(xc)))."""
+    def fn(xc):
+        return stages.combine(stages.compute(stages.dispatch(xc)))
+    return fn
 
 
 def chunked_map(fn: Callable, x: jax.Array, num_chunks: int, *,
@@ -39,3 +76,67 @@ def chunked_map(fn: Callable, x: jax.Array, num_chunks: int, *,
     ys, stats = jax.lax.map(body, xs)
     stats = jax.tree.map(lambda s: s.sum(axis=0), stats)
     return ys.reshape(T, *ys.shape[2:]), stats
+
+
+# ---------------------------------------------------------------------------
+# pipelined schedule
+# ---------------------------------------------------------------------------
+
+def chunked_pipeline(stages: ChunkStages, x: jax.Array, num_chunks: int, *,
+                     depth: int = 2, remat: bool = True):
+    """Software-pipelined FCDA: same math as ``chunked_map(compose(stages))``
+    with up to ``depth`` chunks in flight instead of one.
+
+    The schedule is a wave pipeline: chunks are processed in waves of
+    ``depth`` under a sequential ``lax.map``, and within a wave the member
+    chunks are *mutually independent* computations — chunk i+1's route +
+    single-sort plan + dispatch all-to-all can issue while chunk i's expert
+    FFN computes and chunk i's combine all-to-all drains, because nothing
+    orders them.  The compiler's latency-hiding scheduler gets a depth-wide
+    window to overlap collectives with compute; the wave boundary is the
+    liveness bound — never more than ``depth`` chunks' dispatch buffers in
+    flight, the +1-copy term of the extended memory model
+    (core/memory_model.py).  ``jax.checkpoint`` wraps the whole wave, so the
+    backward pass recomputes wave-by-wave from the wave's tokens alone —
+    Eq. 7 at wave granularity, residuals still one wave, not the token set.
+
+    Two rejected emissions, for the record: a skewed ``lax.scan`` whose
+    carry holds the in-flight buffers (dispatch i+1 / compute i / combine
+    i-1 per iteration) double-buffers those carries every step and — worse —
+    saves them ALL for the backward pass, reintroducing the full ``s'``
+    blow-up FCDA exists to avoid; a fully unrolled chunk list with explicit
+    ordering barriers preserves Eq. 7 but duplicates the chunk code
+    ``num_chunks`` times.  The wave form compiles one wave body, reuses it
+    ``num_chunks/depth`` times, and needs no barriers.
+
+    Returns (y, stats), stats summed across chunks — the same contract as
+    ``chunked_map``.  Falls back to the sequential loop when ``depth == 1``,
+    there are fewer than 2 chunks, or ``depth`` does not divide the chunk
+    count (bins are powers of two, so depth 2 always divides).
+    """
+    T = x.shape[0]
+    if T % num_chunks:
+        raise ValueError(f"token count {T} not divisible by c={num_chunks}")
+    if depth < 1:
+        raise ValueError(f"pipeline depth must be >= 1, got {depth}")
+    depth = min(depth, num_chunks)
+    if num_chunks < 2 or depth == 1 or num_chunks % depth:
+        return chunked_map(compose(stages), x, num_chunks, remat=remat)
+
+    fn = compose(stages)
+    t_c = T // num_chunks
+
+    def wave_fn(xw):
+        # depth independent chunk bodies: the overlap window.  Stats are
+        # summed within the wave (additive, same as across waves).
+        outs = [fn(xw[i]) for i in range(depth)]
+        y = jnp.stack([o[0] for o in outs])
+        st = jax.tree.map(lambda *leaves: sum(leaves[1:], leaves[0]),
+                          *[o[1] for o in outs])
+        return y, st
+
+    body = jax.checkpoint(wave_fn) if remat else wave_fn
+    waves = x.reshape(num_chunks // depth, depth, t_c, *x.shape[1:])
+    ys, stats = lax.map(body, waves)
+    stats = jax.tree.map(lambda s: s.sum(axis=0), stats)
+    return ys.reshape(T, *ys.shape[3:]), stats

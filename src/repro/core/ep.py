@@ -11,12 +11,17 @@ one peer -> cap_send = T_chunk*K) and the local expert buffer the group worst
 case (every group token lands on one local expert -> cap_recv = P*T_chunk).
 Unchunked, that is the paper's `s' -> e*s` blow-up *by construction*; FCDA
 divides both by the chunk count c.
+
+The chunk body is expressed as ``ChunkStages`` (route+dispatch / expert
+compute / combine) so the pipelined schedule (docs/DESIGN.md §Pipeline) can
+overlap chunk i+1's dispatch all-to-all with chunk i's FFN and chunk i-1's
+draining combine; ``pipeline=1`` composes the same stages back into the
+sequential FCDA loop.
 """
 
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
@@ -27,18 +32,21 @@ from repro import compat
 from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as dsp
-from repro.core.chunking import chunked_map
+from repro.core.chunking import ChunkStages, chunked_pipeline
 from repro.core.router import route
 from repro.kernels.ops import (combine_rows, dispatch_rows, expert_ffn,
                                ragged_expert_ffn)
 
+#: default ragged-layout row-block size; per-run override via
+#: DistContext.ragged_block (core/moe.py)
 RAGGED_BLOCK = 128
 
 
 def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
               chunks: int, remat: bool, ep_axis: str, all_axes: tuple,
               use_pallas: bool, ragged: bool = False,
-              interpret: bool = False):
+              interpret: bool = False, pipeline: int = 1,
+              ragged_block: int = RAGGED_BLOCK):
     """Per-device body. x_l: (B_l, S_l, d) local tokens."""
     peers = compat.axis_size(ep_axis)
     E = moe_cfg.num_experts
@@ -47,20 +55,18 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
     tokens = b_l * s_l
     x2 = x_l.reshape(tokens, d)
     k = moe_cfg.top_k
+    t_c = tokens // chunks                 # uniform chunk split (static)
 
-    def chunk_fn(xc):
-        t_c = xc.shape[0]
+    def stage_dispatch(xc):
+        """Route + single-sort plan + dispatch all-to-all (in-flight state)."""
         r = route({"w": router_w, "bias": router_b}, xc, moe_cfg)
         if moe_cfg.capacity_mode == "dropless":
             # a token's k experts are distinct, so at most min(k, E_local) of
             # its slots can target one peer, and at most one can land on a
             # given expert — exact worst cases, not heuristics
             cap_send = t_c * min(k, e_local)
-            cap_recv = peers * t_c
         else:
             cap_send = dsp.balanced_capacity(t_c, k, peers, moe_cfg.capacity_factor)
-            cap_recv = dsp.balanced_capacity(peers * t_c, k, E,
-                                             moe_cfg.capacity_factor)
         # ---- dispatch: ONE stable argsort per chunk plans everything ------
         # sorting by global expert id groups by target device too (experts
         # are contiguous per peer), and within each peer block rows arrive
@@ -73,7 +79,20 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
         send = send.reshape(peers, cap_send, d)                    # (P, cap_s, d)
         recv = lax.all_to_all(send, ep_axis, 0, 0, tiled=True)
         recv_cnt = lax.all_to_all(uplan.counts, ep_axis, 0, 0, tiled=True)
-        # ---- local expert compute ----------------------------------------
+        return {"recv": recv, "recv_cnt": recv_cnt,
+                "send_slots": uplan.send_slots, "weights": r.weights,
+                "aux_loss": r.aux_loss, "load": r.load,
+                "drops_send": uplan.drops}
+
+    def stage_compute(st):
+        """Local expert FFN over the received rows."""
+        recv, recv_cnt = st["recv"], st["recv_cnt"]
+        _, cap_send, _ = recv.shape
+        if moe_cfg.capacity_mode == "dropless":
+            cap_recv = peers * t_c
+        else:
+            cap_recv = dsp.balanced_capacity(peers * t_c, k, E,
+                                             moe_cfg.capacity_factor)
         # no expert-id buffer travels with the rows: each source block is
         # expert-sorted and packed from 0, so the counts matrix alone
         # reconstructs every row's expert (dsp.eids_from_counts)
@@ -84,14 +103,14 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
             # instead of (E_local, cap_recv) per-expert buffers — E_local/k
             # fewer buffer rows, and the Pallas kernels predicate off blocks
             # past the actual load (docs/DESIGN.md §Perf).
-            R = peers * cap_send + e_local * RAGGED_BLOCK
-            R = -(-R // RAGGED_BLOCK) * RAGGED_BLOCK
-            plan_r = dsp.recv_ragged_plan(recv_cnt, local_e, R, RAGGED_BLOCK)
+            R = peers * cap_send + e_local * ragged_block
+            R = -(-R // ragged_block) * ragged_block
+            plan_r = dsp.recv_ragged_plan(recv_cnt, local_e, R, ragged_block)
             buf = dispatch_rows(rows, plan_r.slots, R,
                                 total_rows=plan_r.total_rows,
                                 use_pallas=use_pallas, interpret=interpret)
             h = ragged_expert_ffn(buf, w1, w3, w2, plan_r.block_to_expert,
-                                  plan_r.total_rows, block_m=RAGGED_BLOCK,
+                                  plan_r.total_rows, block_m=ragged_block,
                                   use_pallas=use_pallas, interpret=interpret)
             back = combine_rows(h, plan_r.slots, None, plan_r.total_rows,
                                 use_pallas=use_pallas, interpret=interpret)
@@ -111,20 +130,31 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
                                 interpret=interpret)
             back = back.reshape(peers, cap_send, d)
             drops_e = plan_e.drops
-        # ---- combine: return rows to their senders, weight, reduce --------
+        return {"back": back, "send_slots": st["send_slots"],
+                "weights": st["weights"], "aux_loss": st["aux_loss"],
+                "load": st["load"],
+                "drops": st["drops_send"] + drops_e}
+
+    def stage_combine(st):
+        """Combine all-to-all: return rows to their senders, weight, reduce."""
+        back = st["back"]
+        _, cap_send, _ = back.shape
         recv_back = lax.all_to_all(back, ep_axis, 0, 0, tiled=True)
         y = combine_rows(recv_back.reshape(peers * cap_send, d),
-                         uplan.send_slots, r.weights,
+                         st["send_slots"], st["weights"],
                          use_pallas=use_pallas, interpret=interpret)
         stats = {
-            "aux_loss": lax.pmean(r.aux_loss, all_axes),
-            "load": lax.psum(r.load.astype(jnp.float32), all_axes),
-            "drops": lax.psum((uplan.drops + drops_e).astype(jnp.float32),
-                              all_axes),
+            "aux_loss": lax.pmean(st["aux_loss"], all_axes),
+            "load": lax.psum(st["load"].astype(jnp.float32), all_axes),
+            "drops": lax.psum(st["drops"].astype(jnp.float32), all_axes),
         }
         return y, stats
 
-    y, stats = chunked_map(chunk_fn, x2, chunks, remat=remat)
+    stages = ChunkStages(stage_dispatch, stage_compute, stage_combine)
+    # chunked_pipeline composes the stages back into the sequential loop
+    # when depth or the chunk count rules the pipeline out
+    y, stats = chunked_pipeline(stages, x2, chunks, depth=pipeline,
+                                remat=remat)
     return y.reshape(b_l, s_l, d), stats
 
 
@@ -132,14 +162,17 @@ def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
                batch_axes: tuple = ("data",), ep_axis: str = "model",
                chunks: int = 1, remat: bool = True,
                use_pallas: bool = False, ragged: bool = False,
-               interpret: bool = False):
+               interpret: bool = False, pipeline: int = 1,
+               ragged_block: int = RAGGED_BLOCK):
     """x: (B, S, d) global -> (y, stats).  B sharded over batch_axes, S over
-    ep_axis (the EP group = one row of the model axis)."""
+    ep_axis (the EP group = one row of the model axis).  ``pipeline`` is the
+    FCDA schedule depth: 1 = sequential loop, >= 2 = overlapped chunks."""
     all_axes = tuple(batch_axes) + (ep_axis,)
     fn = functools.partial(
         _ep_local, moe_cfg=moe_cfg, chunks=chunks, remat=remat,
         ep_axis=ep_axis, all_axes=all_axes, use_pallas=use_pallas,
-        ragged=ragged, interpret=interpret)
+        ragged=ragged, interpret=interpret, pipeline=pipeline,
+        ragged_block=ragged_block)
     x_spec = P(tuple(batch_axes), ep_axis, None)
     stats_spec = {"aux_loss": P(), "load": P(None), "drops": P()}
     return shard_map(

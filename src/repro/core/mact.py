@@ -12,6 +12,11 @@ On host, between steps: the trainer feeds back the per-layer expert load
 vector from the previous step; ``observed_s_pp`` turns it into the worst
 per-device received-token count; ``choose`` returns the bin.  Compiled step
 variants are cached per bin by the trainer (<= len(bins) compilations).
+
+``choose_schedule`` extends the choice to the pipelined FCDA schedule
+(docs/DESIGN.md §Pipeline): it picks (chunk bin, pipeline depth) jointly,
+preferring the overlapped schedule when its extra live chunk still fits the
+memory model and falling back to the sequential loop otherwise.
 """
 
 from __future__ import annotations
@@ -55,10 +60,13 @@ class MACTController:
         vector (token-slots per expert, summed over the step)."""
         e = ep_size or self.par.e
         load = np.asarray(load, dtype=np.float64)
-        if load.size % e == 0:
-            per_dev = load.reshape(e, -1).sum(axis=1)
-        else:
-            per_dev = load
+        if load.size % e:
+            raise ValueError(
+                f"expert-load vector of size {load.size} does not divide "
+                f"into ep_size={e} devices; pass the global per-expert load "
+                f"(length a multiple of the EP group size) or the matching "
+                f"ep_size")
+        per_dev = load.reshape(e, -1).sum(axis=1)
         # normalise to a per-microbatch count on the hottest device
         return float(per_dev.max())
 
@@ -81,20 +89,47 @@ class MACTController:
         With no observation yet (step 0) MACT plans for the theoretical worst
         case `s' -> e*s*k` (paper §3) — the safe cold-start the paper uses.
         """
+        return self.choose_schedule(load, ep_size, max_depth=1)[0]
+
+    def choose_schedule(self, load: Optional[np.ndarray] = None,
+                        ep_size: Optional[int] = None, *,
+                        max_depth: int = 2) -> tuple:
+        """Jointly pick (chunk bin, pipeline depth) for the next step.
+
+        Eq. (9) extended with the pipeline's extra live chunk: depth d keeps
+        d chunks' dispatch buffers resident, so fitting requires
+        d * s''/c <= s'_max.  MACT prefers the deepest schedule (overlap =
+        throughput) whose chunk requirement a bin still covers, and falls
+        back to the sequential schedule when the extra in-flight copy would
+        not fit — the paper's memory/throughput trade, second axis.
+        """
         if load is None:
             s_pp = mm.worst_case_s_prime(self.seq_len, self.par, self.dims.topk)
         else:
             s_pp = self.observed_s_pp(load, ep_size)
+        s_max = self.s_prime_max()
+        for depth in range(max(max_depth, 1), 1, -1):
+            c = mm.optimal_chunks(s_pp, s_max, pipeline_depth=depth)
+            b = self.snap(c)
+            # the bin must cover the deeper schedule's chunks AND split into
+            # whole waves — otherwise chunked_pipeline would silently run the
+            # sequential loop while we charge the pipeline's memory
+            if b >= c and b % depth == 0:
+                self.history.append({"s_pp": s_pp, "c_star": c, "bin": b,
+                                     "depth": depth})
+                return b, depth
         c = self.optimal_c(s_pp)
         b = self.snap(c)
-        self.history.append({"s_pp": s_pp, "c_star": c, "bin": b})
-        return b
+        self.history.append({"s_pp": s_pp, "c_star": c, "bin": b, "depth": 1})
+        return b, 1
 
     # -- reporting -------------------------------------------------------------
-    def memory_report(self, s_pp: float, chunks: int) -> dict:
+    def memory_report(self, s_pp: float, chunks: int,
+                      pipeline_depth: int = 1) -> dict:
         act = mm.activation_bytes(self.dims, self.seq_len, s_pp, self.par,
                                   copies=self.copies, chunks=chunks,
-                                  dtype_bytes=self.dtype_bytes)
+                                  dtype_bytes=self.dtype_bytes,
+                                  pipeline_depth=pipeline_depth)
         return {
             "static_gb": self.static / 2**30,
             "activation_gb": act / 2**30,
@@ -102,4 +137,5 @@ class MACTController:
             "fits": mm.fits(self.static, act, self.hw),
             "s_prime_max": self.s_prime_max(),
             "chunks": chunks,
+            "pipeline_depth": pipeline_depth,
         }

@@ -18,6 +18,12 @@ MemFine (FCDA) replaces the s' term's single buffer with the max over c
 chunks; under a uniform chunk split that is s'/c — Eq. (6)-(7)'s memory
 reduction.  Eq. (8) inverts the model for the max admissible s' and Eq. (9)
 derives the optimal chunk count, which MACT snaps to a threshold bin.
+
+The pipelined schedule (docs/DESIGN.md §Pipeline) keeps ``pipeline_depth``
+chunks' dispatch buffers live instead of one, so the chunked MoE term
+becomes s' * min(depth, c)/c and Eq. (9) generalises to
+c = ceil(depth * s'' / s'_max) — the second axis MACT tunes jointly with c
+(core/mact.py::choose_schedule).
 """
 
 from __future__ import annotations
@@ -93,14 +99,18 @@ def moe_act_bytes(dims: LayerDims, s_prime: float, par: Parallelism,
 
 def activation_bytes(dims: LayerDims, s: int, s_prime: float, par: Parallelism,
                      *, copies: int = 1, chunks: int = 1,
-                     dtype_bytes: int = 2) -> float:
+                     dtype_bytes: int = 2, pipeline_depth: int = 1) -> float:
     """Eq. (2) peak activation, with FCDA chunking dividing the MoE term.
 
     ``chunks=1`` is the standard (paper Method 1) layout; ``chunks=c`` models
     MemFine where only one chunk's dispatch buffers are live/stored at a time.
+    ``pipeline_depth=d`` models the overlapped schedule where ``min(d, c)``
+    chunks are in flight at once (docs/DESIGN.md §Pipeline) — the extra live
+    copy the pipeline trades for all-to-all/compute overlap.
     """
     shared = shared_act_bytes(dims, s, par, dtype_bytes)
-    moe = moe_act_bytes(dims, s_prime, par, dtype_bytes) / chunks
+    live = min(max(pipeline_depth, 1), chunks)
+    moe = moe_act_bytes(dims, s_prime, par, dtype_bytes) * live / chunks
     return copies * (shared + moe)
 
 
@@ -214,9 +224,14 @@ def s_prime_max(dims: LayerDims, s: int, par: Parallelism, hw: HardwareProfile,
     return budget / denom
 
 
-def optimal_chunks(s_pp: float, s_max: float) -> int:
+def optimal_chunks(s_pp: float, s_max: float, pipeline_depth: int = 1) -> int:
     """Eq. (9): c = ceil(s'' / s'_max).  Non-positive s_max means even one
-    token per chunk cannot fit -> return a sentinel large value."""
+    token per chunk cannot fit -> return a sentinel large value.
+
+    With a pipelined schedule, ``pipeline_depth`` chunks of s''/c tokens are
+    live at once, so the bound becomes depth * s''/c <= s'_max, i.e.
+    c = ceil(depth * s''/s'_max) — and never fewer than ``depth`` chunks
+    (with c < depth every chunk is live and chunking saves nothing)."""
     if s_max <= 0:
         return 1 << 30
-    return max(1, math.ceil(s_pp / s_max))
+    return max(pipeline_depth, 1, math.ceil(pipeline_depth * s_pp / s_max))

@@ -37,12 +37,17 @@ class DistContext:
     batch_axes: tuple = ("data",)
     ep_axis: str = "model"
     moe_chunks: int = 1                    # FCDA chunk count (MACT-selected)
+    pipeline_chunks: int = 1               # FCDA schedule depth: 1 = sequential
+                                           # loop, >= 2 = overlapped chunks with
+                                           # that many live at once (EP path,
+                                           # docs/DESIGN.md §Pipeline)
     remat_chunks: bool = True              # Eq. (7) per-chunk recomputation
     use_pallas: bool = False
     pallas_interpret: bool = False         # lower kernels in interpret mode
                                            # (CPU dry-run of the kernel path)
     moe_strategy: str = "auto"             # overrides MoEConfig.strategy
     moe_ragged: bool = False               # MegaBlocks-style flat expert buffers
+    ragged_block: int = 128                # ragged-layout row-block size
     act_pspec: Optional[object] = None     # PartitionSpec for (B, S, d) activations
     logits_pspec: Optional[object] = None  # PartitionSpec for (B, S, V) logits
     heads_pspec: Optional[object] = None   # PartitionSpec for (B, S, H, hd) q/k/v
@@ -196,7 +201,9 @@ def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, ctx: DistContext):
                               chunks=ctx.moe_chunks, remat=ctx.remat_chunks,
                               use_pallas=ctx.use_pallas,
                               interpret=ctx.pallas_interpret,
-                              ragged=ctx.moe_ragged)
+                              ragged=ctx.moe_ragged,
+                              pipeline=ctx.pipeline_chunks,
+                              ragged_block=ctx.ragged_block)
         stats = dict(stats)
         stats["aux_loss"] = stats["aux_loss"] / ctx.moe_chunks
     elif strategy == "tp_gspmd":

@@ -35,12 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-
-def _blocks(dim: int, preferred: int) -> int:
-    b = min(preferred, dim)
-    while dim % b:
-        b -= 1
-    return max(b, 1)
+from repro.kernels.tiling import pick_block as _blocks
 
 
 def _scatter_kernel(src_ref, rows_ref, x_ref, w_ref, o_ref, *, bm: int):

@@ -20,6 +20,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import pick_block as _pick_block
+
 
 def _matmul_kernel(x_ref, w_ref, o_ref, acc, *, n_k: int):
     k = pl.program_id(3)
@@ -49,14 +51,6 @@ def _swiglu_kernel(x_ref, w1_ref, w3_ref, o_ref, acc1, acc3, *, n_k: int):
     @pl.when(k == n_k - 1)
     def _epilogue():
         o_ref[0] = (jax.nn.silu(acc1[...]) * acc3[...]).astype(o_ref.dtype)
-
-
-def _pick_block(dim: int, preferred: int) -> int:
-    """Largest divisor of ``dim`` that is <= preferred (MXU likes 128s)."""
-    b = min(preferred, dim)
-    while dim % b:
-        b -= 1
-    return max(b, 1)
 
 
 def grouped_matmul(x: jax.Array, w: jax.Array, *, block_m: int = 128,

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.tiling import pick_block as _blocks
+
 
 def _ragged_kernel(b2e_ref, rows_ref, x_ref, w_ref, o_ref, acc, *, n_k: int):
     k = pl.program_id(2)
@@ -68,13 +70,6 @@ def _ragged_swiglu_kernel(b2e_ref, rows_ref, x_ref, w1_ref, w3_ref, o_ref,
     @pl.when(k == n_k - 1)
     def _epilogue():
         o_ref[...] = (jax.nn.silu(acc1[...]) * acc3[...]).astype(o_ref.dtype)
-
-
-def _blocks(dim: int, preferred: int) -> int:
-    b = min(preferred, dim)
-    while dim % b:
-        b -= 1
-    return max(b, 1)
 
 
 def ragged_matmul(x: jax.Array, w: jax.Array, block_to_expert: jax.Array,

@@ -1,0 +1,17 @@
+"""Shared tile-size selection for the Pallas kernels (docs/DESIGN.md §6).
+
+Every kernel in this package block-decomposes its operands with the same
+rule: the largest divisor of the dimension no bigger than the preferred
+(MXU-aligned) block.  One definition here instead of a copy per kernel
+module.
+"""
+
+from __future__ import annotations
+
+
+def pick_block(dim: int, preferred: int) -> int:
+    """Largest divisor of ``dim`` that is <= preferred (MXU likes 128s)."""
+    b = min(preferred, dim)
+    while dim % b:
+        b -= 1
+    return max(b, 1)

@@ -25,6 +25,12 @@ def main() -> None:
     ap.add_argument("--global-batch", type=int, default=8)
     ap.add_argument("--lr", type=float, default=1e-3)
     ap.add_argument("--chunks", type=int, default=1)
+    ap.add_argument("--pipeline-depth", type=int, default=2,
+                    help="max FCDA schedule depth MACT may pick (>=2 overlaps "
+                         "chunk all-to-alls with expert compute on the EP "
+                         "path); with --no-mact, the fixed depth to run")
+    ap.add_argument("--no-pipeline", action="store_true",
+                    help="force the sequential FCDA chunk loop")
     ap.add_argument("--no-mact", action="store_true")
     ap.add_argument("--remat", default=None, choices=["none", "full", "memfine"])
     ap.add_argument("--mesh", default="local", choices=["local", "prod", "prod-mp"])
@@ -49,16 +55,20 @@ def main() -> None:
     if args.mesh != "local":
         from repro.launch.mesh import make_production_mesh
         mesh = make_production_mesh(multi_pod=args.mesh == "prod-mp")
+    depth = 1 if args.no_pipeline else args.pipeline_depth
     ctx = DistContext(mesh=mesh, moe_chunks=args.chunks,
+                      pipeline_chunks=depth if args.no_mact else 1,
                       use_pallas=args.use_pallas)
     trainer = Trainer(cfg, ctx, seq_len=args.seq_len,
                       global_batch=args.global_batch, lr=args.lr,
                       use_mact=not args.no_mact,
+                      max_pipeline_depth=depth,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every=args.checkpoint_every)
     state = trainer.fit(args.steps, verbose=True)
     print(f"final loss {trainer.log[-1]['loss']:.4f} after {args.steps} steps; "
-          f"chunk trace tail {trainer.chunk_trace[-8:]}")
+          f"chunk trace tail {trainer.chunk_trace[-8:]}; "
+          f"pipeline trace tail {trainer.pipeline_trace[-8:]}")
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(trainer.log, f, indent=1)

@@ -1,11 +1,12 @@
 """Training loop with the MACT dynamic chunk controller in the driver seat.
 
 Each step:
-  1. MACT chooses the chunk bin from the previous step's router load (s''),
-     via the theoretical memory model (Eq. 8-9) — cold-starting from the
-     worst case `s' -> e*s*k`.
-  2. The step function compiled for that bin runs (compiled variants are
-     cached; <= len(bins) compilations ever happen).
+  1. MACT chooses the FCDA schedule — chunk bin AND pipeline depth — from the
+     previous step's router load (s''), via the theoretical memory model
+     (Eq. 8-9, extended with the pipeline's extra live chunk) — cold-starting
+     from the worst case `s' -> e*s*k`.
+  2. The step function compiled for that (bin, depth) runs (compiled variants
+     are cached; <= 2 * len(bins) compilations ever happen).
   3. Router loads feed back to MACT; metrics/chunk trace are recorded
      (benchmarks/fig5 reads the trace).
 """
@@ -41,12 +42,14 @@ class Trainer:
     par: Optional[Parallelism] = None
     mact_bins: tuple = (1, 2, 4, 8)
     use_mact: bool = True
+    max_pipeline_depth: int = 2          # MACT may pick depth in [1, this]
     mact_ep_view: Optional[int] = None   # group experts per hypothetical device
     static_override: Optional[float] = None
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     log: list = field(default_factory=list)
     chunk_trace: list = field(default_factory=list)
+    pipeline_trace: list = field(default_factory=list)
 
     def __post_init__(self):
         if self.par is None:
@@ -64,22 +67,32 @@ class Trainer:
             static_override=self.static_override)
         self.data = SyntheticLMData(self.cfg, self.seq_len, self.global_batch,
                                     self.seed)
-        self._steps: dict[int, object] = {}
+        self._steps: dict[tuple[int, int], object] = {}
         self._last_load: Optional[np.ndarray] = None
 
-    # -- compiled step per chunk bin ------------------------------------------
-    def _step_for(self, chunks: int):
-        if chunks not in self._steps:
-            ctx = dataclasses.replace(self.ctx, moe_chunks=chunks)
-            self._steps[chunks] = jax.jit(make_train_step(self.cfg, ctx,
-                                                          lr=self.lr))
-        return self._steps[chunks]
+    # -- compiled step per (chunk bin, pipeline depth) -------------------------
+    def _step_for(self, chunks: int, pipeline: int = 1):
+        key = (chunks, pipeline)
+        if key not in self._steps:
+            ctx = dataclasses.replace(self.ctx, moe_chunks=chunks,
+                                      pipeline_chunks=pipeline)
+            self._steps[key] = jax.jit(make_train_step(self.cfg, ctx,
+                                                       lr=self.lr))
+        return self._steps[key]
+
+    def choose_schedule(self) -> tuple:
+        """(chunks, pipeline depth) for the next step — MACT-selected."""
+        if not self.use_mact or self.cfg.moe is None:
+            return self.ctx.moe_chunks, self.ctx.pipeline_chunks
+        ep_view = self.mact_ep_view or max(self.par.e, 1)
+        # local path has no all-to-all to overlap: plan sequential-only so
+        # the bin is not sized for a depth that will never run
+        max_depth = self.max_pipeline_depth if self.ctx.mesh is not None else 1
+        return self.mact.choose_schedule(self._last_load, ep_size=ep_view,
+                                         max_depth=max_depth)
 
     def choose_chunks(self) -> int:
-        if not self.use_mact or self.cfg.moe is None:
-            return self.ctx.moe_chunks
-        ep_view = self.mact_ep_view or max(self.par.e, 1)
-        return self.mact.choose(self._last_load, ep_size=ep_view)
+        return self.choose_schedule()[0]
 
     # -- main loop ---------------------------------------------------------------
     def fit(self, steps: int, state: Optional[TrainState] = None,
@@ -87,11 +100,11 @@ class Trainer:
         if state is None:
             state = init_train_state(jax.random.PRNGKey(self.seed), self.cfg)
         for i in range(steps):
-            chunks = self.choose_chunks()
+            chunks, pipeline = self.choose_schedule()
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.data.batch_at(int(state.step)).items()}
             t0 = time.perf_counter()
-            state, metrics = self._step_for(chunks)(state, batch)
+            state, metrics = self._step_for(chunks, pipeline)(state, batch)
             loss = float(metrics["loss"])          # sync point
             dt = time.perf_counter() - t0
             load = np.asarray(metrics["load"])
@@ -100,10 +113,12 @@ class Trainer:
             rec = {"step": int(state.step), "loss": loss,
                    "ce": float(metrics["ce"]), "aux": float(metrics["aux"]),
                    "grad_norm": float(metrics["grad_norm"]),
-                   "chunks": chunks, "time_s": dt, "tgs": tgs,
-                   "max_load": float(load.max()), "drops": float(metrics["drops"])}
+                   "chunks": chunks, "pipeline": pipeline, "time_s": dt,
+                   "tgs": tgs, "max_load": float(load.max()),
+                   "drops": float(metrics["drops"])}
             self.log.append(rec)
             self.chunk_trace.append(chunks)
+            self.pipeline_trace.append(pipeline)
             if verbose:
                 print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
                       f"c={chunks} tgs={tgs:,.0f}")

@@ -8,7 +8,8 @@ import pytest
 from hypothesis import given, settings, strategies as st
 
 from repro.kernels import ref
-from repro.kernels.grouped_mlp import _pick_block, grouped_matmul, grouped_swiglu
+from repro.kernels.grouped_mlp import grouped_matmul, grouped_swiglu
+from repro.kernels.tiling import pick_block as _pick_block
 from repro.kernels.ops import expert_ffn
 
 SHAPES = [
