@@ -1,5 +1,7 @@
-"""MACT in isolation: how the chunk choice responds to hardware budget,
-observed imbalance, and parallelism — the paper's Eq. 8-9 made tangible.
+"""MACT in isolation: how the schedule responds to hardware budget, observed
+imbalance, pipeline depth, and per-layer drift — the paper's Eq. 8-9 made
+tangible, plus the PR-2 depth axis and the adaptive per-layer controller
+(docs/DESIGN.md §Pipeline, §Adaptive).
 
   PYTHONPATH=src python examples/mact_tuning.py
 """
@@ -15,15 +17,17 @@ cfg = get_config("deepseek-mini-16l")
 par = Parallelism(t=1, p=4, e=32, b=1)
 S = 4096
 
-print("=== chunk choice vs hardware (paper model I, static=43GB) ===")
+print("=== schedule vs hardware (paper model I, static=43GB) ===")
 for hw in (GPU_64G, TPU_V5E,
            HardwareProfile("gpu-24g", 24e9, 197e12, 819e9, 50e9)):
-    mact = MACTController(cfg, par, hw, seq_len=S, static_override=min(43e9, hw.hbm_bytes * 0.6))
+    mact = MACTController(cfg, par, hw, seq_len=S,
+                          static_override=min(43e9, hw.hbm_bytes * 0.6))
     wc = worst_case_s_prime(S, par, cfg.moe.top_k)
+    b, d = mact.choose_schedule()
     print(f"{hw.name:10s}: s'_max={mact.s_prime_max():>12.0f}  "
-          f"worst-case c*={mact.optimal_c(wc):>6}  bin={mact.choose()}")
+          f"worst-case c*={mact.optimal_c(wc):>6}  bin={b} depth={d}")
 
-print("\n=== chunk choice vs observed imbalance (64GB GPU) ===")
+print("\n=== schedule vs observed imbalance (64GB GPU) ===")
 mact = MACTController(cfg, par, GPU_64G, seq_len=S, static_override=43e9)
 E = cfg.moe.num_experts
 for skew in (1.0, 2.0, 8.0, 32.0):
@@ -31,9 +35,23 @@ for skew in (1.0, 2.0, 8.0, 32.0):
     load = np.full(E, 1.0)
     load[: E // par.e] *= skew
     load = load / load.sum() * 4096 * 8 * par.e   # total slots in the EP group
-    c = mact.choose(load, ep_size=par.e)
+    b, d = mact.choose_schedule(load, ep_size=par.e)
     print(f"skew {skew:5.1f}x -> s''={mact.history[-1]['s_pp']:>10.0f} "
-          f"c*={mact.history[-1]['c_star']:>3} bin={c}")
+          f"c*={mact.history[-1]['c_star']:>3} bin={b} depth={d}")
+
+print("\n=== adaptive per-layer schedules under drifting skew ===")
+# four layers: two idle, one mid-skew, one ramping hot — each gets its own
+# (bin, depth) through the same memory model; hysteresis holds schedules
+# still under +-4% load noise (the flapping test of tests/test_adaptive.py)
+s_max = mact.s_prime_max()
+cur = None
+for t, hot in enumerate((0.8, 2.0, 4.0, 6.5)):
+    s_pps = [0.8 * (1 + 0.04 * (-1) ** t), 0.8, 1.8, hot]
+    loads = np.stack([np.full(E, s * s_max / E) for s in s_pps])
+    cur = mact.choose_layer_schedules(loads, 4, ep_size=1, max_depth=2,
+                                      current=cur, hysteresis=0.1)
+    print(f"t={t}: hot={hot:.1f}x s'_max -> "
+          f"{[tuple(s) for s in cur]}")
 
 print("\n=== the paper's own operating point ===")
 c = mact.snap(mact.optimal_c(5.97e5))

@@ -1,7 +1,8 @@
-"""Quickstart: MemFine in ~40 lines.
+"""Quickstart: MemFine in ~50 lines.
 
 Builds a small MoE transformer, shows FCDA chunk invariance, lets MACT pick
-the chunk count from the theoretical memory model, and trains a few steps.
+the (chunk bin, pipeline depth) schedule from the theoretical memory model,
+and trains a few steps with the adaptive per-layer controller in the loop.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -25,17 +26,29 @@ print(f"arch: {cfg.name} — {cfg.num_layers}L d={cfg.d_model} "
 params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 64), 0,
                                       cfg.vocab_size)}
-y1, _ = transformer.forward(params, cfg, DistContext(moe_chunks=1), batch)
+y1, s1 = transformer.forward(params, cfg, DistContext(moe_chunks=1), batch)
 y4, _ = transformer.forward(params, cfg, DistContext(moe_chunks=4), batch)
 print(f"FCDA chunk invariance: max|y1-y4| = {np.abs(y1 - y4).max():.2e}")
+# the stats contract also reports per-layer routed-token histograms — the
+# adaptive controller's telemetry source (docs/DESIGN.md §Perf, §Adaptive)
+print(f"per-layer load telemetry: {s1['load_per_layer'].shape} "
+      f"(layers x experts)")
 
-# 3. MACT: derive the chunk count from the memory model (Eq. 8-9)
+# 3. MACT: derive the FCDA schedule from the memory model (Eq. 8-9).  The
+# joint choice picks chunk bin AND pipeline depth — depth 2 overlaps chunk
+# all-to-alls with expert compute when the extra live chunk still fits.
 mact = MACTController(get_config("deepseek-mini-16l"),
                       Parallelism(t=1, p=4, e=32, b=1), TPU_V5E, seq_len=4096)
+b, d = mact.choose_schedule()
 print(f"MACT on TPU v5e: s'_max={mact.s_prime_max():.0f} tokens, "
-      f"cold-start chunk bin = {mact.choose()}")
+      f"cold-start schedule = (bin {b}, depth {d})")
 
-# 4. train with the MACT controller in the loop
-trainer = Trainer(cfg, DistContext(), seq_len=64, global_batch=4, lr=2e-3)
+# 4. train with the adaptive per-layer controller in the loop: every layer
+# gets its own (bin, depth) from the telemetry EMA, with hysteresis
+trainer = Trainer(cfg, DistContext(), seq_len=64, global_batch=4, lr=2e-3,
+                  adaptive_mact=True, replan_interval=2)
 trainer.fit(10, verbose=True)
 print(f"loss {trainer.log[0]['loss']:.3f} -> {trainer.log[-1]['loss']:.3f}")
+print(f"last per-layer schedules: "
+      f"{[tuple(s) for s in trainer.schedule_trace[-1]]} "
+      f"({trainer.compile_count} compiled step variants)")

@@ -1,0 +1,101 @@
+#!/usr/bin/env python3
+"""Fail if any `docs/DESIGN.md §X` reference in src/ has no matching section.
+
+The code docstrings cite the design doc by section token (`docs/DESIGN.md
+§2`, `§Pipeline`, `§Adaptive`, ...) and DESIGN.md promises to keep those
+tokens stable.  PR 1 repointed every reference; this check is what enforces
+the contract from then on (wired into .github/workflows/ci.yml).
+
+  python scripts/check_doc_refs.py            # from the repo root
+  python scripts/check_doc_refs.py --list     # show the reference map
+
+Exit code 0 when every referenced section exists, 1 otherwise.
+"""
+
+from __future__ import annotations
+
+import argparse
+import pathlib
+import re
+import sys
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+DESIGN = REPO / "docs" / "DESIGN.md"
+SRC = REPO / "src"
+
+# a reference is the literal doc path followed by one or more section
+# tokens, "/"- or ","-separated: "docs/DESIGN.md §2", "docs/DESIGN.md
+# §Dry-run / §Roofline", "docs/DESIGN.md §2, §Adaptive" ("§N" is the doc's
+# own placeholder convention, skipped below)
+REF_RE = re.compile(r"docs/DESIGN\.md\s+((?:§[\w.-]+(?:\s*[,/]\s*)?)+)")
+TOKEN_RE = re.compile(r"§([\w-]+(?:\.\d+)*)")
+HEADING_RE = re.compile(r"^##\s+(.*)$", re.MULTILINE)
+PLACEHOLDERS = {"N", "X"}          # generic tokens in prose, not references
+
+
+def design_sections() -> set[str]:
+    """Every §-token declared by a DESIGN.md heading (a heading may declare
+    several: '## §Dry-run / §Roofline')."""
+    text = DESIGN.read_text()
+    tokens: set[str] = set()
+    for heading in HEADING_RE.findall(text):
+        tokens.update(TOKEN_RE.findall(heading))
+    return tokens
+
+
+def source_refs() -> dict[str, list[str]]:
+    """section token -> ['path:line', ...] for every reference under src/.
+
+    Matches against the whole file text (REF_RE's ``\\s+`` crosses
+    newlines), so a reference wrapped over two lines by docstring reflow
+    still registers."""
+    refs: dict[str, list[str]] = {}
+    for path in sorted(SRC.rglob("*.py")):
+        text = path.read_text()
+        for m in REF_RE.finditer(text):
+            lineno = text.count("\n", 0, m.start()) + 1
+            for tok in TOKEN_RE.findall(m.group(1)):
+                tok = tok.rstrip(".")
+                if tok in PLACEHOLDERS:
+                    continue
+                where = f"{path.relative_to(REPO)}:{lineno}"
+                refs.setdefault(tok, []).append(where)
+    return refs
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--list", action="store_true",
+                    help="print the full section -> references map")
+    args = ap.parse_args()
+
+    sections = design_sections()
+    refs = source_refs()
+    if args.list:
+        for tok in sorted(refs):
+            mark = "ok" if tok in sections else "MISSING"
+            print(f"§{tok} [{mark}] <- {len(refs[tok])} refs")
+            for w in refs[tok]:
+                print(f"    {w}")
+
+    missing = {tok: where for tok, where in refs.items()
+               if tok not in sections}
+    if missing:
+        print(f"doc-ref check FAILED: {len(missing)} section token(s) "
+              f"referenced from src/ but absent from docs/DESIGN.md:",
+              file=sys.stderr)
+        for tok, where in sorted(missing.items()):
+            print(f"  §{tok}  referenced at: {', '.join(where)}",
+                  file=sys.stderr)
+        print(f"known sections: "
+              f"{', '.join('§' + t for t in sorted(sections))}",
+              file=sys.stderr)
+        return 1
+    n = sum(len(v) for v in refs.values())
+    print(f"doc-ref check OK: {n} references to {len(refs)} sections, "
+          f"all present in docs/DESIGN.md")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

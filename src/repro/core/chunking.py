@@ -24,6 +24,16 @@ import jax.numpy as jnp
 from jax import lax
 
 
+class ScheduleSpec(NamedTuple):
+    """One MoE layer's FCDA schedule: ``chunks`` is the MACT-snapped chunk
+    bin, ``depth`` the pipeline depth (1 = sequential loop, >= 2 = the
+    overlapped wave schedule below).  Hashable and static, so a tuple of
+    these — one per MoE layer, threaded through ``DistContext`` — is a valid
+    compiled-step cache key (docs/DESIGN.md §Adaptive)."""
+    chunks: int
+    depth: int = 1
+
+
 class ChunkStages(NamedTuple):
     """The FCDA chunk body split at its communication boundaries.
 

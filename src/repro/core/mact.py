@@ -17,6 +17,14 @@ variants are cached per bin by the trainer (<= len(bins) compilations).
 (docs/DESIGN.md §Pipeline): it picks (chunk bin, pipeline depth) jointly,
 preferring the overlapped schedule when its extra live chunk still fits the
 memory model and falling back to the sequential loop otherwise.
+
+``choose_layer_schedules`` is the adaptive per-layer extension
+(docs/DESIGN.md §Adaptive): fed the telemetry EMA of per-layer expert-load
+histograms (core/telemetry.py), it resolves one ``ScheduleSpec`` per MoE
+layer through the same Eq. 2/7/9 model, with load-margin hysteresis so a
+layer's schedule only moves when the re-plan is either forced by memory
+safety or stable under ``(1 + hysteresis)`` load noise — schedules never
+flap on boundary jitter.
 """
 
 from __future__ import annotations
@@ -28,6 +36,7 @@ import numpy as np
 
 from repro.configs.base import HardwareProfile, ModelConfig
 from repro.core import memory_model as mm
+from repro.core.chunking import ScheduleSpec
 
 
 @dataclass
@@ -91,6 +100,19 @@ class MACTController:
         """
         return self.choose_schedule(load, ep_size, max_depth=1)[0]
 
+    def _schedule_for(self, s_pp: float, max_depth: int = 2) -> ScheduleSpec:
+        """Pure Eq. 9 schedule choice for one load estimate (no history)."""
+        s_max = self.s_prime_max()
+        for depth in range(max(max_depth, 1), 1, -1):
+            c = mm.optimal_chunks(s_pp, s_max, pipeline_depth=depth)
+            b = self.snap(c)
+            # the bin must cover the deeper schedule's chunks AND split into
+            # whole waves — otherwise chunked_pipeline would silently run the
+            # sequential loop while we charge the pipeline's memory
+            if b >= c and b % depth == 0:
+                return ScheduleSpec(b, depth)
+        return ScheduleSpec(self.snap(self.optimal_c(s_pp)), 1)
+
     def choose_schedule(self, load: Optional[np.ndarray] = None,
                         ep_size: Optional[int] = None, *,
                         max_depth: int = 2) -> tuple:
@@ -107,21 +129,86 @@ class MACTController:
             s_pp = mm.worst_case_s_prime(self.seq_len, self.par, self.dims.topk)
         else:
             s_pp = self.observed_s_pp(load, ep_size)
-        s_max = self.s_prime_max()
-        for depth in range(max(max_depth, 1), 1, -1):
-            c = mm.optimal_chunks(s_pp, s_max, pipeline_depth=depth)
-            b = self.snap(c)
-            # the bin must cover the deeper schedule's chunks AND split into
-            # whole waves — otherwise chunked_pipeline would silently run the
-            # sequential loop while we charge the pipeline's memory
-            if b >= c and b % depth == 0:
-                self.history.append({"s_pp": s_pp, "c_star": c, "bin": b,
-                                     "depth": depth})
-                return b, depth
-        c = self.optimal_c(s_pp)
-        b = self.snap(c)
-        self.history.append({"s_pp": s_pp, "c_star": c, "bin": b, "depth": 1})
-        return b, 1
+        sched = self._schedule_for(s_pp, max_depth)
+        c = mm.optimal_chunks(s_pp, self.s_prime_max(),
+                              pipeline_depth=sched.depth)
+        self.history.append({"s_pp": s_pp, "c_star": c, "bin": sched.chunks,
+                             "depth": sched.depth})
+        return tuple(sched)
+
+    # -- adaptive per-layer scheduling (docs/DESIGN.md §Adaptive) --------------
+    def schedule_space(self, max_depth: int = 2) -> tuple:
+        """Every per-layer schedule the controller can ever emit — the
+        bucketed key space that provably bounds the trainer's recompiles:
+        a compiled step exists per distinct schedule *vector*, and each
+        vector component comes from this set."""
+        space = [ScheduleSpec(b, 1) for b in sorted(self.bins)]
+        for depth in range(2, max(max_depth, 1) + 1):
+            space += [ScheduleSpec(b, depth) for b in sorted(self.bins)
+                      if b >= depth and b % depth == 0]
+        return tuple(space)
+
+    def _admissible(self, sched: ScheduleSpec, s_pp: float) -> bool:
+        """Does ``sched`` still fit the memory model at load ``s_pp``?  True
+        iff its bin covers the Eq. 9 chunk requirement at its depth."""
+        c = mm.optimal_chunks(s_pp, self.s_prime_max(),
+                              pipeline_depth=sched.depth)
+        return sched.chunks >= c
+
+    def choose_layer_schedules(self, loads: Optional[np.ndarray],
+                               num_layers: int,
+                               ep_size: Optional[int] = None, *,
+                               max_depth: int = 2,
+                               current: Optional[Sequence[ScheduleSpec]] = None,
+                               hysteresis: float = 0.0,
+                               headroom: float = 0.0) -> tuple:
+        """Resolve one ``ScheduleSpec`` per MoE layer from per-layer loads.
+
+        ``loads`` is the telemetry EMA matrix ``(num_layers, E)`` (or None at
+        cold start, which plans every layer for the worst case — the same
+        safe start as the global path).  ``headroom`` inflates every layer's
+        load estimate to ``(1 + headroom) * s''`` before choosing: the EMA
+        trails a drifting distribution and the plan stays in force for a
+        whole re-plan interval, so the margin is what keeps a ramping layer's
+        schedule ahead of its load between plans.  ``current`` is the vector
+        in force; with it, load-margin hysteresis applies per layer:
+
+        * memory safety — if the incumbent schedule no longer covers the
+          layer's Eq. 9 chunk requirement, switch immediately;
+        * stability — otherwise adopt the candidate only if it is also the
+          choice at ``(1 + hysteresis) * s_pp``, i.e. the re-plan survives
+          the hysteresis band of load noise.  The memory model is monotone
+          in s'', so this is exactly "the predicted memory delta clears the
+          threshold" expressed on the load axis.
+
+        Returns a tuple of ``ScheduleSpec`` (hashable: the trainer's
+        compiled-step cache key).
+        """
+        if loads is None:
+            wc = mm.worst_case_s_prime(self.seq_len, self.par, self.dims.topk)
+            s_pps = [float(wc)] * num_layers
+        else:
+            loads = np.asarray(loads, dtype=np.float64)
+            if loads.ndim != 2 or loads.shape[0] != num_layers:
+                raise ValueError(
+                    f"per-layer load matrix of shape {loads.shape}, expected "
+                    f"({num_layers}, E)")
+            s_pps = [self.observed_s_pp(loads[j], ep_size)
+                     * (1.0 + headroom)
+                     for j in range(num_layers)]
+        out = []
+        for j, s_pp in enumerate(s_pps):
+            cand = self._schedule_for(s_pp, max_depth)
+            if current is not None and j < len(current):
+                inc = ScheduleSpec(*current[j])
+                if cand != inc and self._admissible(inc, s_pp) and (
+                        hysteresis > 0.0
+                        and self._schedule_for(s_pp * (1.0 + hysteresis),
+                                               max_depth) != cand):
+                    cand = inc           # inside the hysteresis band: hold
+            out.append(cand)
+        self.history.append({"s_pp": s_pps, "layer_schedules": tuple(out)})
+        return tuple(out)
 
     # -- reporting -------------------------------------------------------------
     def memory_report(self, s_pp: float, chunks: int,

@@ -24,6 +24,10 @@ chunks' dispatch buffers live instead of one, so the chunked MoE term
 becomes s' * min(depth, c)/c and Eq. (9) generalises to
 c = ceil(depth * s'' / s'_max) — the second axis MACT tunes jointly with c
 (core/mact.py::choose_schedule).
+
+The full derivation, with every symbol here mapped to its paper name and
+every equation worked through (including the adaptive per-layer peak
+M_sta + max_j M_act(s''_j)), lives in docs/MEMORY_MODEL.md.
 """
 
 from __future__ import annotations

@@ -48,6 +48,11 @@ class DistContext:
     moe_strategy: str = "auto"             # overrides MoEConfig.strategy
     moe_ragged: bool = False               # MegaBlocks-style flat expert buffers
     ragged_block: int = 128                # ragged-layout row-block size
+    layer_schedules: Optional[tuple] = None  # adaptive MACT: one ScheduleSpec
+                                           # (chunks, depth) per MoE layer, in
+                                           # layer order; overrides moe_chunks/
+                                           # pipeline_chunks per layer
+                                           # (docs/DESIGN.md §Adaptive)
     act_pspec: Optional[object] = None     # PartitionSpec for (B, S, d) activations
     logits_pspec: Optional[object] = None  # PartitionSpec for (B, S, V) logits
     heads_pspec: Optional[object] = None   # PartitionSpec for (B, S, H, hd) q/k/v

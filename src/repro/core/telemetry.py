@@ -1,0 +1,59 @@
+"""Online expert-load telemetry for the adaptive MACT controller.
+
+The model already reports, through the ``moe_ffn`` stats contract
+(docs/DESIGN.md §Perf), the per-expert routed-token demand of every step.
+``transformer.forward`` additionally stacks the per-MoE-layer rows into a
+``load_per_layer`` matrix of shape ``(L_moe, E)``.  This module keeps the
+*host-side* running view of that stream: a per-layer exponential moving
+average of the routed-token histograms, which ``MACTController.
+choose_layer_schedules`` reads each re-plan interval to resolve a
+heterogeneous per-layer (chunk bin, pipeline depth) schedule
+(docs/DESIGN.md §Adaptive).
+
+Everything here is tiny numpy on host — O(L_moe * E) floats per step, no
+device transfers beyond the metrics the trainer already fetches.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Optional
+
+import numpy as np
+
+
+@dataclass
+class LoadTelemetry:
+    """Per-layer EMA of the routed-token histograms.
+
+    ``decay`` is the EMA retention: ``ema <- decay * ema + (1-decay) * obs``.
+    The first observation initialises the EMA directly (no zero-bias warmup:
+    MACT must not under-plan memory while the average ramps).
+    """
+    num_layers: int
+    num_experts: int
+    decay: float = 0.6
+    steps: int = 0
+    _ema: Optional[np.ndarray] = field(default=None, repr=False)
+
+    def update(self, load_per_layer) -> np.ndarray:
+        obs = np.asarray(load_per_layer, dtype=np.float64)
+        if obs.shape != (self.num_layers, self.num_experts):
+            raise ValueError(
+                f"telemetry update of shape {obs.shape}, expected "
+                f"({self.num_layers}, {self.num_experts})")
+        if self._ema is None:
+            self._ema = obs.copy()
+        else:
+            self._ema = self.decay * self._ema + (1.0 - self.decay) * obs
+        self.steps += 1
+        return self._ema
+
+    @property
+    def loads(self) -> Optional[np.ndarray]:
+        """(L_moe, E) EMA load matrix, or None before the first update."""
+        return None if self._ema is None else self._ema.copy()
+
+    def reset(self) -> None:
+        self._ema = None
+        self.steps = 0

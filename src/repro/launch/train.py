@@ -32,6 +32,19 @@ def main() -> None:
     ap.add_argument("--no-pipeline", action="store_true",
                     help="force the sequential FCDA chunk loop")
     ap.add_argument("--no-mact", action="store_true")
+    ap.add_argument("--adaptive-mact", action="store_true",
+                    help="per-layer (bin, depth) schedules from the online "
+                         "expert-load telemetry EMA (docs/DESIGN.md §Adaptive)")
+    ap.add_argument("--replan-interval", type=int, default=1,
+                    help="steps between adaptive MACT re-plans")
+    ap.add_argument("--mact-hysteresis", type=float, default=0.1,
+                    help="load-margin hysteresis band; a layer's schedule "
+                         "only moves when the re-plan survives (1+h)x load "
+                         "noise or memory safety forces it")
+    ap.add_argument("--mact-headroom", type=float, default=0.2,
+                    help="plan each layer for (1+this)*EMA load — the margin "
+                         "that keeps a drifting layer's schedule ahead of "
+                         "its load between re-plans")
     ap.add_argument("--remat", default=None, choices=["none", "full", "memfine"])
     ap.add_argument("--mesh", default="local", choices=["local", "prod", "prod-mp"])
     ap.add_argument("--use-pallas", action="store_true")
@@ -63,12 +76,21 @@ def main() -> None:
                       global_batch=args.global_batch, lr=args.lr,
                       use_mact=not args.no_mact,
                       max_pipeline_depth=depth,
+                      adaptive_mact=args.adaptive_mact,
+                      replan_interval=args.replan_interval,
+                      mact_hysteresis=args.mact_hysteresis,
+                      mact_headroom=args.mact_headroom,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every=args.checkpoint_every)
     state = trainer.fit(args.steps, verbose=True)
     print(f"final loss {trainer.log[-1]['loss']:.4f} after {args.steps} steps; "
           f"chunk trace tail {trainer.chunk_trace[-8:]}; "
           f"pipeline trace tail {trainer.pipeline_trace[-8:]}")
+    if args.adaptive_mact and trainer.schedule_trace:
+        last = trainer.schedule_trace[-1]
+        print(f"adaptive layer schedules (last plan): "
+              f"{[tuple(s) for s in last]}; "
+              f"compiles {trainer.compile_count}")
     if args.log_json:
         with open(args.log_json, "w") as f:
             json.dump(trainer.log, f, indent=1)

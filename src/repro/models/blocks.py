@@ -12,6 +12,7 @@ Remat policy (docs/DESIGN.md §2):
 
 from __future__ import annotations
 
+import dataclasses
 from typing import NamedTuple, Optional
 
 import jax
@@ -19,6 +20,7 @@ import jax.numpy as jnp
 from jax.ad_checkpoint import checkpoint_name
 
 from repro.configs.base import LayerSpec, ModelConfig
+from repro.core.chunking import ScheduleSpec
 from repro.core.moe import DistContext, init_moe, moe_ffn
 from repro.models import ssm as ssm_mod
 from repro.models.attention import attention, decode_attention
@@ -30,6 +32,23 @@ def zero_stats(cfg: ModelConfig) -> dict:
     E = cfg.moe.num_experts if cfg.moe else 1
     return {"aux_loss": jnp.float32(0), "load": jnp.zeros((E,), jnp.float32),
             "drops": jnp.float32(0)}
+
+
+def layer_ctx(ctx: DistContext, moe_index: Optional[int]) -> DistContext:
+    """The DistContext one MoE layer actually runs under.
+
+    With a heterogeneous schedule vector (``ctx.layer_schedules``, adaptive
+    MACT — docs/DESIGN.md §Adaptive) the layer at MoE position ``moe_index``
+    gets its own (chunk bin, pipeline depth); otherwise the global schedule
+    applies unchanged.  The returned ctx drops ``layer_schedules`` so the
+    MoE layer below sees exactly the static knobs it always did.
+    """
+    if ctx.layer_schedules is None or moe_index is None:
+        return ctx
+    spec = ScheduleSpec(*ctx.layer_schedules[moe_index])
+    return dataclasses.replace(ctx, moe_chunks=spec.chunks,
+                               pipeline_chunks=spec.depth,
+                               layer_schedules=None)
 
 
 # ---------------------------------------------------------------------------

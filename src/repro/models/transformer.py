@@ -127,8 +127,31 @@ def encode(params: dict, cfg: ModelConfig, frames: jax.Array,
 # forward (train / prefill)
 # ---------------------------------------------------------------------------
 
+def num_moe_layers(cfg: ModelConfig) -> int:
+    """Length of the per-layer schedule vector (adaptive MACT) and of the
+    ``load_per_layer`` telemetry matrix's leading axis."""
+    return sum(1 for s in cfg.layer_specs() if s.ffn == "moe")
+
+
 def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
-    """Returns (logits: (B, S, V) f32, stats: summed MoE stats)."""
+    """Returns (logits: (B, S, V) f32, stats: summed MoE stats).
+
+    For MoE configs ``stats`` additionally carries ``load_per_layer``, the
+    (L_moe, E) matrix of per-MoE-layer routed-token histograms in layer
+    order — the telemetry source for adaptive MACT (core/telemetry.py,
+    docs/DESIGN.md §Adaptive).  ``ctx.layer_schedules`` (one ScheduleSpec
+    per MoE layer) overrides the global (moe_chunks, pipeline_chunks) per
+    layer; when the vector differs *across* scanned periods the period scan
+    is unrolled (per-layer schedules are static, and a scan body is one
+    trace), while a vector uniform across periods keeps the O(period) HLO —
+    and reproduces the global path bit-for-bit.
+    """
+    if ctx.layer_schedules is not None:
+        want = num_moe_layers(cfg)
+        if len(ctx.layer_schedules) != want:
+            raise ValueError(
+                f"layer_schedules has {len(ctx.layer_schedules)} entries, "
+                f"config {cfg.name!r} has {want} MoE layers")
     enc_out = None
     if cfg.encoder_layers:
         enc_out = encode(params, cfg, batch["frames"], ctx)
@@ -138,33 +161,92 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     pattern = cfg.pattern
     stats_total = blocks.zero_stats(cfg)
+    E = cfg.moe.num_experts if cfg.moe else 1
+    layer_loads: list = []        # (n, E) pieces, MoE-layer order
+    moe_idx = 0                   # position in the per-layer schedule vector
+
+    def run_layer(layer_params, x, spec, moe_idx):
+        lctx = blocks.layer_ctx(ctx, moe_idx if spec.ffn == "moe" else None)
+        x, st = blocks.apply_layer(layer_params, x, spec, cfg, lctx,
+                                   positions, enc_out=enc_out)
+        return _constrain(x, ctx.act_pspec), st
 
     for i, layer_params in enumerate(params.get("pre", [])):
-        x, st = blocks.apply_layer(layer_params, x, cfg.prefix[i], cfg, ctx,
-                                   positions, enc_out=enc_out)
-        x = _constrain(x, ctx.act_pspec)
+        spec = cfg.prefix[i]
+        x, st = run_layer(layer_params, x, spec, moe_idx)
         stats_total = jax.tree.map(jnp.add, stats_total, st)
+        if spec.ffn == "moe":
+            layer_loads.append(st["load"][None])
+            moe_idx += 1
 
     if params["periods"] is not None:
-        def body(x, period_params):
-            stats_p = blocks.zero_stats(cfg)
-            for i, spec in enumerate(pattern):
-                x, st = blocks.apply_layer(period_params[i], x, spec, cfg, ctx,
-                                           positions, enc_out=enc_out)
-                stats_p = jax.tree.map(jnp.add, stats_p, st)
-            x = _constrain(x, ctx.act_pspec)
-            return x, stats_p
+        np_ = cfg.num_periods
+        n_moe_pat = sum(1 for s in pattern if s.ffn == "moe")
+        sched = ctx.layer_schedules
+        uniform = sched is None or all(
+            len({tuple(sched[moe_idx + p * n_moe_pat + m])
+                 for p in range(np_)}) == 1
+            for m in range(n_moe_pat))
 
-        x, stats_stack = jax.lax.scan(body, x, params["periods"])
-        stats_total = jax.tree.map(lambda a, s: a + s.sum(0), stats_total,
-                                   stats_stack)
+        if uniform:
+            # one trace serves every period: resolve each pattern position's
+            # ctx from period 0's schedule and keep the O(period) scan
+            pat_ctx, m = {}, 0
+            for i, spec in enumerate(pattern):
+                if spec.ffn == "moe":
+                    pat_ctx[i] = blocks.layer_ctx(ctx, moe_idx + m)
+                    m += 1
+                else:
+                    pat_ctx[i] = ctx
+
+            def body(x, period_params):
+                stats_p = blocks.zero_stats(cfg)
+                loads_p = []
+                for i, spec in enumerate(pattern):
+                    x, st = blocks.apply_layer(period_params[i], x, spec, cfg,
+                                               pat_ctx[i], positions,
+                                               enc_out=enc_out)
+                    stats_p = jax.tree.map(jnp.add, stats_p, st)
+                    if spec.ffn == "moe":
+                        loads_p.append(st["load"])
+                x = _constrain(x, ctx.act_pspec)
+                loads_p = (jnp.stack(loads_p) if loads_p
+                           else jnp.zeros((0, E), jnp.float32))
+                return x, (stats_p, loads_p)
+
+            x, (stats_stack, loads_stack) = jax.lax.scan(body, x,
+                                                         params["periods"])
+            stats_total = jax.tree.map(lambda a, s: a + s.sum(0), stats_total,
+                                       stats_stack)
+            if n_moe_pat:
+                layer_loads.append(loads_stack.reshape(np_ * n_moe_pat, E))
+        else:
+            # heterogeneous schedules inside the scanned region: unroll the
+            # periods so each layer compiles under its own (bin, depth)
+            for p in range(np_):
+                period_params = jax.tree.map(lambda a, p=p: a[p],
+                                             params["periods"])
+                for i, spec in enumerate(pattern):
+                    x, st = run_layer(period_params[i], x, spec, moe_idx)
+                    stats_total = jax.tree.map(jnp.add, stats_total, st)
+                    if spec.ffn == "moe":
+                        layer_loads.append(st["load"][None])
+                        moe_idx += 1
+        if uniform:
+            moe_idx += np_ * n_moe_pat
 
     for i, layer_params in enumerate(params["rem"]):
         spec = pattern[i % len(pattern)]
-        x, st = blocks.apply_layer(layer_params, x, spec, cfg, ctx, positions,
-                                   enc_out=enc_out)
-        x = _constrain(x, ctx.act_pspec)
+        x, st = run_layer(layer_params, x, spec, moe_idx)
         stats_total = jax.tree.map(jnp.add, stats_total, st)
+        if spec.ffn == "moe":
+            layer_loads.append(st["load"][None])
+            moe_idx += 1
+
+    if cfg.moe is not None:
+        stats_total["load_per_layer"] = (
+            jnp.concatenate(layer_loads, axis=0) if layer_loads
+            else jnp.zeros((0, E), jnp.float32))
 
     logits = unembed(params, cfg, x)
     logits = _constrain(logits, ctx.logits_pspec)

@@ -1,8 +1,10 @@
 """Loss and the train-step factory.
 
-``make_train_step(cfg, ctx, ...)`` closes over a *static* FCDA chunk count
-(XLA requires it); the MACT trainer keeps one compiled step per chunk bin and
-switches between them from the router-load feedback (docs/DESIGN.md §2).
+``make_train_step(cfg, ctx, ...)`` closes over a *static* FCDA schedule —
+the global chunk count, or the full per-layer ``ScheduleSpec`` vector under
+adaptive MACT (XLA requires it); the trainer keeps one compiled step per
+schedule key and switches between them from the router-load feedback
+(docs/DESIGN.md §2, §Adaptive).
 """
 
 from __future__ import annotations
@@ -46,11 +48,16 @@ def loss_fn(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
     logits, stats = transformer.forward(params, cfg, ctx, batch)
     ce = cross_entropy(logits, batch["labels"])
     aux_coef = cfg.moe.router_aux_coef if cfg.moe else 0.0
-    n_moe = max(1, sum(1 for s in cfg.layer_specs() if s.ffn == "moe"))
+    n_moe = max(1, transformer.num_moe_layers(cfg))
     aux = stats["aux_loss"] / n_moe
     loss = ce + aux_coef * aux
-    return loss, {"ce": ce, "aux": aux, "load": stats["load"],
-                  "drops": stats["drops"]}
+    m = {"ce": ce, "aux": aux, "load": stats["load"],
+         "drops": stats["drops"]}
+    if "load_per_layer" in stats:
+        # (L_moe, E) per-layer routed-token histograms — the adaptive MACT
+        # telemetry stream (core/telemetry.py)
+        m["load_per_layer"] = stats["load_per_layer"]
+    return loss, m
 
 
 def make_train_step(cfg: ModelConfig, ctx: DistContext, *, lr=3e-4):

@@ -1,20 +1,29 @@
 """Training loop with the MACT dynamic chunk controller in the driver seat.
 
 Each step:
-  1. MACT chooses the FCDA schedule — chunk bin AND pipeline depth — from the
-     previous step's router load (s''), via the theoretical memory model
-     (Eq. 8-9, extended with the pipeline's extra live chunk) — cold-starting
-     from the worst case `s' -> e*s*k`.
-  2. The step function compiled for that (bin, depth) runs (compiled variants
-     are cached; <= 2 * len(bins) compilations ever happen).
-  3. Router loads feed back to MACT; metrics/chunk trace are recorded
-     (benchmarks/fig5 reads the trace).
+  1. MACT chooses the FCDA schedule from the previous step's router load
+     (s''), via the theoretical memory model (Eq. 8-9, extended with the
+     pipeline's extra live chunk) — cold-starting from the worst case
+     `s' -> e*s*k`.  Global mode picks one (chunk bin, pipeline depth);
+     adaptive mode (``adaptive_mact=True``, docs/DESIGN.md §Adaptive)
+     resolves a *per-layer* ScheduleSpec vector from the telemetry EMA of
+     per-layer expert loads, re-planned every ``replan_interval`` steps with
+     load-margin hysteresis.
+  2. The step function compiled for that schedule key runs.  Compiled
+     variants live in a bounded LRU cache keyed by the schedule — the
+     global (bin, depth) pair, or the full per-layer vector (uniform
+     vectors collapse to the global key, so the adaptive path reuses the
+     static compilations bit-for-bit).
+  3. Router loads feed back to MACT/telemetry; metrics/chunk trace are
+     recorded (benchmarks/fig5 reads the trace).
 """
 
 from __future__ import annotations
 
 import dataclasses
 import time
+import warnings
+from collections import OrderedDict
 from dataclasses import dataclass, field
 from typing import Optional
 
@@ -22,10 +31,13 @@ import jax
 import numpy as np
 
 from repro.configs.base import HardwareProfile, ModelConfig, TPU_V5E
+from repro.core.chunking import ScheduleSpec
 from repro.core.mact import MACTController
 from repro.core.memory_model import Parallelism
 from repro.core.moe import DistContext
+from repro.core.telemetry import LoadTelemetry
 from repro.data.pipeline import SyntheticLMData
+from repro.models.transformer import num_moe_layers
 from repro.training.step import TrainState, init_train_state, make_train_step
 from repro import checkpointing
 
@@ -45,11 +57,20 @@ class Trainer:
     max_pipeline_depth: int = 2          # MACT may pick depth in [1, this]
     mact_ep_view: Optional[int] = None   # group experts per hypothetical device
     static_override: Optional[float] = None
+    adaptive_mact: bool = False          # per-layer schedules from telemetry
+    replan_interval: int = 1             # steps between adaptive re-plans
+    mact_hysteresis: float = 0.1         # load-margin band for schedule moves
+    mact_headroom: float = 0.2           # plan for (1+this)*EMA: covers the
+                                         # drift a plan must survive between
+                                         # re-plans (EMA lag + replan_interval)
+    telemetry_decay: float = 0.6         # per-layer load EMA retention
+    max_compiled_steps: int = 8          # LRU bound on cached compiled steps
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
     log: list = field(default_factory=list)
     chunk_trace: list = field(default_factory=list)
     pipeline_trace: list = field(default_factory=list)
+    schedule_trace: list = field(default_factory=list)  # adaptive: full vectors
 
     def __post_init__(self):
         if self.par is None:
@@ -67,32 +88,118 @@ class Trainer:
             static_override=self.static_override)
         self.data = SyntheticLMData(self.cfg, self.seq_len, self.global_batch,
                                     self.seed)
-        self._steps: dict[tuple[int, int], object] = {}
+        self._steps: OrderedDict[tuple, object] = OrderedDict()
         self._last_load: Optional[np.ndarray] = None
+        self._n_moe = num_moe_layers(self.cfg)
+        self.telemetry = LoadTelemetry(
+            self._n_moe, self.cfg.moe.num_experts if self.cfg.moe else 1,
+            decay=self.telemetry_decay)
+        self._layer_schedules: Optional[tuple] = None
+        self._plan_age = 0
+        self.compile_count = 0
+        self.evicted_recompile_count = 0
+        self._evicted_keys: set = set()
 
-    # -- compiled step per (chunk bin, pipeline depth) -------------------------
+    # -- bounded compiled-step cache -------------------------------------------
+    # Keyed by the schedule: a global (chunk bin, pipeline depth) pair of
+    # ints, or the full per-layer ScheduleSpec vector (adaptive MACT).  Every
+    # vector component comes from MACTController.schedule_space, so the key
+    # space is bucketed and finite; the LRU cap bounds resident compilations
+    # regardless (docs/DESIGN.md §Adaptive).
     def _step_for(self, chunks: int, pipeline: int = 1):
-        key = (chunks, pipeline)
-        if key not in self._steps:
-            ctx = dataclasses.replace(self.ctx, moe_chunks=chunks,
-                                      pipeline_chunks=pipeline)
-            self._steps[key] = jax.jit(make_train_step(self.cfg, ctx,
-                                                       lr=self.lr))
-        return self._steps[key]
+        return self._compiled((chunks, pipeline))
 
-    def choose_schedule(self) -> tuple:
-        """(chunks, pipeline depth) for the next step — MACT-selected."""
-        if not self.use_mact or self.cfg.moe is None:
-            return self.ctx.moe_chunks, self.ctx.pipeline_chunks
+    def _compiled(self, key: tuple):
+        if key in self._steps:
+            self._steps.move_to_end(key)
+            return self._steps[key]
+        if key and isinstance(key[0], tuple):        # per-layer vector
+            ctx = dataclasses.replace(
+                self.ctx, layer_schedules=tuple(ScheduleSpec(*s) for s in key))
+        else:
+            # clear any caller-supplied vector: the global key IS the schedule
+            ctx = dataclasses.replace(self.ctx, moe_chunks=key[0],
+                                      pipeline_chunks=key[1],
+                                      layer_schedules=None)
+        fn = jax.jit(make_train_step(self.cfg, ctx, lr=self.lr))
+        self._steps[key] = fn
+        self.compile_count += 1
+        if key in self._evicted_keys:
+            # the schedule working set exceeds the cache: every round trip
+            # re-traces the step graph — raise max_compiled_steps (or the
+            # hysteresis) if this fires often
+            self.evicted_recompile_count += 1
+            warnings.warn(
+                f"recompiling previously-evicted schedule key {key}; "
+                f"{self.evicted_recompile_count} evict-recompiles so far "
+                f"(max_compiled_steps={self.max_compiled_steps})")
+        while len(self._steps) > self.max_compiled_steps:
+            evicted, _ = self._steps.popitem(last=False)
+            self._evicted_keys.add(evicted)
+        return fn
+
+    def _plan_params(self) -> tuple:
+        """(ep_view, max_depth) both planning modes share."""
         ep_view = self.mact_ep_view or max(self.par.e, 1)
         # local path has no all-to-all to overlap: plan sequential-only so
         # the bin is not sized for a depth that will never run
         max_depth = self.max_pipeline_depth if self.ctx.mesh is not None else 1
+        return ep_view, max_depth
+
+    def choose_schedule(self) -> tuple:
+        """(chunks, pipeline depth) for the next step — MACT-selected.
+
+        Note the feedback scale: the global path plans from ``stats["load"]``
+        summed over every MoE layer, so its s'' overestimates the per-layer
+        received-token count by up to L_moe — conservative on memory (more
+        chunks than strictly needed), and the historical behavior fig5/
+        table4 track.  The adaptive path (``adaptive_mact=True``) plans from
+        the per-layer telemetry rows, which is the memory model's native
+        granularity.
+        """
+        if not self.use_mact or self.cfg.moe is None:
+            return self.ctx.moe_chunks, self.ctx.pipeline_chunks
+        ep_view, max_depth = self._plan_params()
         return self.mact.choose_schedule(self._last_load, ep_size=ep_view,
                                          max_depth=max_depth)
 
     def choose_chunks(self) -> int:
         return self.choose_schedule()[0]
+
+    def choose_layer_schedules(self) -> tuple:
+        """Per-layer ScheduleSpec vector for the next step (adaptive MACT).
+
+        Re-plans from the telemetry EMA every ``replan_interval`` steps (and
+        at cold start, from the worst case); between re-plans the vector in
+        force is reused, so the compiled step does not even change identity.
+        """
+        if self._layer_schedules is None or self._plan_age >= self.replan_interval:
+            ep_view, max_depth = self._plan_params()
+            self._layer_schedules = self.mact.choose_layer_schedules(
+                self.telemetry.loads, self._n_moe, ep_size=ep_view,
+                max_depth=max_depth, current=self._layer_schedules,
+                hysteresis=self.mact_hysteresis,
+                headroom=self.mact_headroom)
+            self._plan_age = 0
+        self._plan_age += 1
+        return self._layer_schedules
+
+    @staticmethod
+    def _vector_key(vec: tuple) -> tuple:
+        vec = tuple(ScheduleSpec(*s) for s in vec)
+        if len(set(vec)) == 1:           # uniform: collapse to the global
+            return (vec[0].chunks, vec[0].depth)   # path (scan + reuse)
+        return vec
+
+    def _next_schedule_key(self) -> tuple:
+        """The compiled-step cache key for the next step."""
+        if (self.adaptive_mact and self.use_mact and self.cfg.moe is not None
+                and self._n_moe > 0):
+            return self._vector_key(self.choose_layer_schedules())
+        if self.ctx.layer_schedules and not self.use_mact:
+            # hand-picked per-layer schedule, no controller: honor it
+            return self._vector_key(self.ctx.layer_schedules)
+        return tuple(self.choose_schedule())
 
     # -- main loop ---------------------------------------------------------------
     def fit(self, steps: int, state: Optional[TrainState] = None,
@@ -100,15 +207,23 @@ class Trainer:
         if state is None:
             state = init_train_state(jax.random.PRNGKey(self.seed), self.cfg)
         for i in range(steps):
-            chunks, pipeline = self.choose_schedule()
+            key = self._next_schedule_key()
+            if key and isinstance(key[0], tuple):      # per-layer vector
+                chunks = max(s[0] for s in key)        # memory-binding layer
+                pipeline = max(s[1] for s in key)
+            else:
+                chunks, pipeline = key
             batch = {k: jax.numpy.asarray(v)
                      for k, v in self.data.batch_at(int(state.step)).items()}
             t0 = time.perf_counter()
-            state, metrics = self._step_for(chunks, pipeline)(state, batch)
+            state, metrics = self._compiled(key)(state, batch)
             loss = float(metrics["loss"])          # sync point
             dt = time.perf_counter() - t0
             load = np.asarray(metrics["load"])
             self._last_load = load
+            if (self.adaptive_mact and self._n_moe
+                    and "load_per_layer" in metrics):
+                self.telemetry.update(np.asarray(metrics["load_per_layer"]))
             tgs = self.global_batch * self.seq_len / max(dt, 1e-9)
             rec = {"step": int(state.step), "loss": loss,
                    "ce": float(metrics["ce"]), "aux": float(metrics["aux"]),
@@ -119,6 +234,8 @@ class Trainer:
             self.log.append(rec)
             self.chunk_trace.append(chunks)
             self.pipeline_trace.append(pipeline)
+            if self.adaptive_mact and self._layer_schedules is not None:
+                self.schedule_trace.append(self._layer_schedules)
             if verbose:
                 print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
                       f"c={chunks} tgs={tgs:,.0f}")

@@ -1,0 +1,256 @@
+"""Adaptive per-layer MACT: telemetry, hysteresis, recompile bounds, and
+static-path parity (docs/DESIGN.md §Adaptive)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.configs.base import (AttentionSpec, HardwareProfile, LayerSpec,
+                                ModelConfig, MoEConfig)
+from repro.core.chunking import ScheduleSpec
+from repro.core.mact import MACTController
+from repro.core.memory_model import Parallelism
+from repro.core.moe import DistContext
+from repro.core.telemetry import LoadTelemetry
+from repro.models import transformer
+from repro.training.trainer import Trainer
+
+
+def _cfg4() -> ModelConfig:
+    """4 MoE layers, one per period — exercises the scanned region."""
+    return ModelConfig(
+        name="adaptive-t4", family="moe", source="tests",
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=256,
+        pattern=(LayerSpec(mixer="attn", ffn="moe", attn=AttentionSpec()),),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=96),
+        dtype="float32")
+
+
+def _mact(bins=(1, 2, 4, 8)) -> MACTController:
+    # static_override=0 and a small HBM make s'_max a round, controllable
+    # number so tests can park loads right at bin boundaries
+    hw = HardwareProfile("test", hbm_bytes=1e8, peak_flops=1, hbm_bw=1,
+                        ici_bw=1, alpha=0.9)
+    return MACTController(get_config("deepseek-mini-8l").reduced(),
+                          Parallelism(e=1, b=1), hw, seq_len=128, bins=bins,
+                          static_override=0.0)
+
+
+def _loads_for(mact: MACTController, s_pp: float, layers: int = 1):
+    """(layers, E) load matrix whose observed s'' is exactly s_pp (e=1)."""
+    E = mact.cfg.moe.num_experts
+    return np.full((layers, E), s_pp / E)
+
+
+# ---------------------------------------------------------------------------
+# telemetry
+# ---------------------------------------------------------------------------
+
+def test_telemetry_ema_math_and_shape_guard():
+    t = LoadTelemetry(num_layers=2, num_experts=3, decay=0.5)
+    assert t.loads is None
+    a = np.arange(6, dtype=np.float64).reshape(2, 3)
+    assert np.allclose(t.update(a), a)            # first obs initialises
+    b = np.ones((2, 3))
+    assert np.allclose(t.update(b), 0.5 * a + 0.5 * b)
+    assert t.steps == 2
+    with pytest.raises(ValueError):
+        t.update(np.ones((3, 3)))
+    t.reset()
+    assert t.loads is None and t.steps == 0
+
+
+def test_forward_emits_per_layer_loads_summing_to_global():
+    cfg = _cfg4()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    _, stats = transformer.forward(params, cfg, DistContext(moe_chunks=2),
+                                   batch)
+    lpl = stats["load_per_layer"]
+    assert lpl.shape == (4, cfg.moe.num_experts)
+    assert np.allclose(np.asarray(lpl).sum(0), np.asarray(stats["load"]))
+    # every layer actually routed every token-slot
+    T = 2 * 32 * cfg.moe.top_k
+    assert np.allclose(np.asarray(lpl).sum(1), T)
+
+
+# ---------------------------------------------------------------------------
+# static-path parity
+# ---------------------------------------------------------------------------
+
+def test_uniform_vector_reproduces_static_path_bitwise():
+    cfg = _cfg4()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    y_static, s_static = transformer.forward(
+        params, cfg, DistContext(moe_chunks=2), batch)
+    uni = tuple(ScheduleSpec(2, 1) for _ in range(4))
+    y_vec, s_vec = transformer.forward(
+        params, cfg, DistContext(layer_schedules=uni), batch)
+    assert (np.asarray(y_static) == np.asarray(y_vec)).all()
+    assert (np.asarray(s_static["load_per_layer"])
+            == np.asarray(s_vec["load_per_layer"])).all()
+
+
+def test_heterogeneous_vector_unrolls_and_matches_loads():
+    cfg = _cfg4()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    batch = {"tokens": jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                          cfg.vocab_size)}
+    y_static, s_static = transformer.forward(
+        params, cfg, DistContext(moe_chunks=1), batch)
+    het = (ScheduleSpec(1, 1), ScheduleSpec(2, 1), ScheduleSpec(4, 1),
+           ScheduleSpec(8, 1))
+    y_het, s_het = transformer.forward(
+        params, cfg, DistContext(layer_schedules=het), batch)
+    # chunking is numerically (not bitwise) invariant; routing is identical
+    assert np.abs(np.asarray(y_static) - np.asarray(y_het)).max() < 1e-4
+    assert np.allclose(np.asarray(s_static["load_per_layer"]),
+                       np.asarray(s_het["load_per_layer"]))
+
+
+# ---------------------------------------------------------------------------
+# controller: per-layer choice + hysteresis
+# ---------------------------------------------------------------------------
+
+def test_cold_start_plans_worst_case_uniformly():
+    mact = _mact()
+    vec = mact.choose_layer_schedules(None, 3, max_depth=2)
+    assert len(vec) == 3 and len(set(vec)) == 1
+    assert tuple(vec[0]) == mact.choose_schedule(max_depth=2)
+
+
+def test_per_layer_choice_tracks_per_layer_load():
+    mact = _mact()
+    s_max = mact.s_prime_max()
+    loads = np.concatenate([_loads_for(mact, 0.5 * s_max),
+                            _loads_for(mact, 3.5 * s_max)])
+    vec = mact.choose_layer_schedules(loads, 2, max_depth=1)
+    assert vec[0].chunks == 1 and vec[1].chunks == 4
+    assert len(set(vec)) == 2
+
+
+def test_hysteresis_prevents_flapping_under_noisy_load():
+    mact = _mact()
+    s_max = mact.s_prime_max()
+    # load oscillating +-4% around the c=2 -> c=3 boundary (2 * s'_max):
+    # the candidate bin flips 2 <-> 4 every step without hysteresis
+    noisy = [2.0 * s_max * (1 + eps)
+             for eps in (0.04, -0.04, 0.04, -0.04, 0.04, -0.04)]
+
+    def run(h):
+        cur, changes = None, 0
+        for s_pp in noisy:
+            vec = mact.choose_layer_schedules(
+                _loads_for(mact, s_pp), 1, max_depth=1, current=cur,
+                hysteresis=h)
+            if cur is not None and vec != cur:
+                changes += 1
+            cur = vec
+        return changes, cur
+
+    flaps, _ = run(0.0)
+    assert flaps >= 3                      # no hysteresis: flips every step
+    stable, cur = run(0.1)
+    assert stable <= 1                     # one safety up-switch, then holds
+    assert cur[0].chunks == 4              # held at the memory-safe bin
+
+
+def test_safety_switch_overrides_hysteresis():
+    mact = _mact()
+    s_max = mact.s_prime_max()
+    cur = (ScheduleSpec(2, 1),)
+    vec = mact.choose_layer_schedules(
+        _loads_for(mact, 6.0 * s_max), 1, max_depth=1, current=cur,
+        hysteresis=10.0)                   # absurd band: safety still wins
+    assert vec[0].chunks == 8
+
+
+def test_schedule_emissions_within_bucketed_space():
+    mact = _mact()
+    space = set(mact.schedule_space(max_depth=2))
+    s_max = mact.s_prime_max()
+    rng = np.random.default_rng(0)
+    for _ in range(20):
+        s_pp = float(rng.uniform(0.1, 12.0)) * s_max
+        vec = mact.choose_layer_schedules(_loads_for(mact, s_pp), 1,
+                                          max_depth=2)
+        assert set(vec) <= space
+    # the space itself is small: len(bins) sequential + the depth-2 subset
+    assert len(space) == 4 + 3
+
+
+# ---------------------------------------------------------------------------
+# trainer: bounded compiled-step cache + adaptive loop
+# ---------------------------------------------------------------------------
+
+def test_compiled_step_cache_is_lru_bounded():
+    cfg = _cfg4()
+    tr = Trainer(cfg, DistContext(), seq_len=32, global_batch=2, lr=1e-3,
+                 max_compiled_steps=2)
+    keys = [(1, 1), (2, 1), (4, 1)]
+    for k in keys:
+        tr._compiled(k)
+    assert tr.compile_count == 3
+    assert len(tr._steps) == 2             # LRU evicted the oldest
+    assert (1, 1) not in tr._steps
+    tr._compiled((2, 1))                   # hit: no recompile
+    assert tr.compile_count == 3
+    assert tr.evicted_recompile_count == 0
+    with pytest.warns(UserWarning, match="previously-evicted"):
+        tr._compiled((1, 1))               # evicted: recompile, warned
+    assert tr.compile_count == 4
+    assert tr.evicted_recompile_count == 1
+
+
+def test_user_layer_schedules_honored_without_mact():
+    cfg = _cfg4()
+    vec = (ScheduleSpec(1, 1), ScheduleSpec(2, 1), ScheduleSpec(4, 1),
+           ScheduleSpec(2, 1))
+    tr = Trainer(cfg, DistContext(layer_schedules=vec), seq_len=32,
+                 global_batch=2, lr=1e-3, use_mact=False)
+    tr.fit(2)
+    assert vec in tr._steps                # the hand-picked vector ran
+    assert tr.chunk_trace == [4, 4]        # memory-binding layer reported
+
+
+def test_adaptive_fit_records_schedules_and_bounds_compiles():
+    cfg = _cfg4()
+    tr = Trainer(cfg, DistContext(), seq_len=32, global_batch=2, lr=1e-3,
+                 use_mact=True, adaptive_mact=True, replan_interval=2,
+                 mact_ep_view=cfg.moe.num_experts)
+    tr.fit(5)
+    assert len(tr.schedule_trace) == 5
+    assert all(len(v) == 4 for v in tr.schedule_trace)
+    space = set(tr.mact.schedule_space(max_depth=1))
+    assert all(set(v) <= space for v in tr.schedule_trace)
+    # uniform vectors collapse to the global cache key -> static-path reuse
+    assert all(not isinstance(k[0], tuple) or len(set(k)) > 1
+               for k in tr._steps)
+    assert tr.compile_count <= tr.max_compiled_steps
+    # replan_interval=2 over 5 steps -> 3 plans (cold start + 2 re-plans)
+    plans = [h for h in tr.mact.history if "layer_schedules" in h]
+    assert len(plans) == 3
+    assert tr.telemetry.steps == 5
+
+
+def test_adaptive_uniform_telemetry_matches_static_trainer_losses():
+    cfg = _cfg4()
+    kw = dict(seq_len=32, global_batch=2, lr=1e-3,
+              mact_ep_view=cfg.moe.num_experts)
+    tr_s = Trainer(cfg, DistContext(), use_mact=True, **kw)
+    tr_a = Trainer(cfg, DistContext(), use_mact=True, adaptive_mact=True,
+                   **kw)
+    tr_s.fit(3)
+    tr_a.fit(3)
+    # same data, same cold start; per-layer telemetry is (near-)uniform so
+    # the adaptive trainer runs the very same compiled steps -> same losses
+    assert [r["loss"] for r in tr_s.log] == [r["loss"] for r in tr_a.log]
+    assert tr_s.chunk_trace == tr_a.chunk_trace

@@ -29,6 +29,15 @@ def test_train_cli_with_mact_and_chunks():
     assert "final loss" in out
 
 
+def test_train_cli_adaptive_mact():
+    out = _run(["repro.launch.train", "--arch", "mixtral-8x7b", "--smoke",
+                "--steps", "3", "--seq-len", "32", "--global-batch", "2",
+                "--adaptive-mact", "--replan-interval", "2",
+                "--mact-hysteresis", "0.1"])
+    assert "final loss" in out
+    assert "adaptive layer schedules" in out
+
+
 def test_serve_cli_smoke():
     out = _run(["repro.launch.serve", "--arch", "gemma3-27b", "--smoke",
                 "--batch", "2", "--prompt-len", "8", "--gen", "4"])
