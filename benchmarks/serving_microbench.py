@@ -1,0 +1,155 @@
+"""Continuous batching vs static-batch generation under a mixed-length trace.
+
+Two reduced archs — gemma3-27b (windowed attention, dense FFN) and
+mixtral-8x7b (windowed attention, MoE) — serve the same trace of requests
+with widely varying generation lengths two ways:
+
+* **static**: requests grouped into arrival-order batches of ``SLOTS``;
+  each batch prefills together (prompts padded to a common length) and
+  decodes until its LONGEST request finishes — the old
+  ``serving.engine.generate`` regime, where short requests ride along as
+  dead slots.
+* **continuous**: the slot-map scheduler (docs/DESIGN.md §Serving) —
+  finished requests leave at step boundaries, queued requests join via
+  memory-model admission and chunk-interleaved prefill.
+
+Throughput counts only requested tokens, so the static path's dead-slot
+waves and pad-token prefill cost it directly.  Both paths run the same
+compiled decode step; compiles are warmed (and the scheduler reset) before
+timing.  Prompt lengths are drawn as multiples of the prefill chunk so
+every chunk shape compiles exactly once.
+
+Also checks the admission invariant: the scheduler's modeled peak stays
+<= the configured budget.
+
+Emits CSV lines per repo convention and writes ``BENCH_serving.json``
+(skipped in tiny/CI mode: SERVING_BENCH_TINY=1).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+ARCHS = ("gemma3-27b", "mixtral-8x7b")
+SLOTS = 4
+PREFILL_CHUNK = 16
+PROMPT_LENS = (16, 32, 48)
+GEN_SHORT = (4, 12)             # 3/4 of requests
+GEN_LONG = (40, 64)             # 1/4 long tail — what static batching waits on
+REQUESTS = 16
+TINY_REQUESTS = 4
+
+
+def _gen_len(rng) -> int:
+    """Long-tailed generation lengths: mostly short replies, a quarter long —
+    the mixed-length regime continuous batching exists for.  A static batch
+    decodes max(gen) waves for every member; the scheduler backfills."""
+    lo, hi = GEN_LONG if rng.random() < 0.25 else GEN_SHORT
+    return int(rng.integers(lo, hi + 1))
+
+
+def _trace(rng, n, vocab):
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    return [Request(rid=i,
+                    tokens=rng.integers(0, vocab,
+                                        int(rng.choice(PROMPT_LENS))).astype(np.int32),
+                    max_new_tokens=_gen_len(rng),
+                    arrival=0.0)
+            for i in range(n)]
+
+
+def _static_serve(params, cfg, ctx, requests, cache_len):
+    """Arrival-order batches of SLOTS; each batch decodes until its longest
+    request is done.  Prompts pad (left, token 0) to the global max prompt
+    so the prefill compiles once.  Returns (useful_tokens, elapsed_s)."""
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving import engine
+
+    pad_to = max(len(r.tokens) for r in requests)
+    useful = 0
+    t0 = time.perf_counter()
+    for i in range(0, len(requests), SLOTS):
+        batch = requests[i:i + SLOTS]
+        toks = np.zeros((len(batch), pad_to), np.int32)
+        for j, r in enumerate(batch):
+            toks[j, pad_to - len(r.tokens):] = r.tokens
+        steps = max(r.max_new_tokens for r in batch)
+        out = engine.generate(params, cfg, ctx, {"tokens": jnp.asarray(toks)},
+                              steps=steps, cache_len=cache_len)
+        out.block_until_ready()
+        useful += sum(r.max_new_tokens for r in batch)
+    return useful, time.perf_counter() - t0
+
+
+def run() -> list[str]:
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.moe import DistContext
+    from repro.models import transformer
+    from repro.serving.scheduler import ContinuousBatchingScheduler, ServeConfig
+
+    tiny = bool(os.environ.get("SERVING_BENCH_TINY"))
+    n_requests = TINY_REQUESTS if tiny else REQUESTS
+    ctx = DistContext()
+    lines, rows = [], []
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+        rng = np.random.default_rng(0)
+        cache_len = max(PROMPT_LENS) + GEN_LONG[1]
+        trace = _trace(rng, n_requests, cfg.vocab_size)
+
+        scfg = ServeConfig(max_slots=SLOTS, cache_len=cache_len,
+                           prefill_chunk=PREFILL_CHUNK)
+        sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+        # warm every compile (prefill shapes, extend chunk, decode wave,
+        # static path) on a throwaway slice of the trace, then reset
+        warm = _trace(np.random.default_rng(1), min(4, n_requests),
+                      cfg.vocab_size)
+        sched.run([r for r in warm])
+        sched.reset()
+        _static_serve(params, cfg, ctx, warm, cache_len)
+
+        trace_static = _trace(np.random.default_rng(0), n_requests,
+                              cfg.vocab_size)
+        m = sched.run(trace)
+        static_tokens, static_s = _static_serve(params, cfg, ctx,
+                                                trace_static, cache_len)
+        static_tps = static_tokens / static_s
+        speedup = m["tok_per_s"] / static_tps
+        row = {
+            "arch": arch,
+            "requests": n_requests,
+            "continuous_tok_s": round(m["tok_per_s"], 2),
+            "static_tok_s": round(static_tps, 2),
+            "speedup": round(speedup, 3),
+            "latency_p50_s": round(m["latency_p50_s"], 3),
+            "latency_p99_s": round(m["latency_p99_s"], 3),
+            "modeled_peak_gb": round(m["modeled_peak_bytes"] / 1e9, 4),
+            "budget_gb": round(m["budget_bytes"] / 1e9, 1),
+            "within_budget": m["modeled_peak_bytes"] <= m["budget_bytes"],
+            "max_occupancy": m["max_occupancy"],
+        }
+        rows.append(row)
+        lines.append(f"serving,arch={arch},continuous_tok_s="
+                     f"{row['continuous_tok_s']},static_tok_s="
+                     f"{row['static_tok_s']},speedup={row['speedup']},"
+                     f"within_budget={row['within_budget']}")
+    if not tiny:
+        with open("BENCH_serving.json", "w") as f:
+            json.dump({"slots": SLOTS, "prefill_chunk": PREFILL_CHUNK,
+                       "prompt_lens": PROMPT_LENS,
+                       "gen_short": GEN_SHORT, "gen_long": GEN_LONG,
+                       "requests": REQUESTS, "rows": rows}, f, indent=2)
+        lines.append("serving,written=BENCH_serving.json")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -72,6 +72,27 @@ def adaptive_table() -> list[str]:
     return out
 
 
+def serving_table() -> list[str]:
+    d = _load("BENCH_serving.json")
+    if not d:
+        return ["(BENCH_serving.json missing — run `benchmarks.run serving`)"]
+    out = ["| arch | continuous tok/s | static tok/s | speedup "
+           "| p50 / p99 latency (s) | modeled peak <= budget |",
+           "|---|---|---|---|---|---|"]
+    for r in d["rows"]:
+        out.append(f"| {r['arch']} | **{r['continuous_tok_s']:.0f}** "
+                   f"| {r['static_tok_s']:.0f} | {r['speedup']:.2f}x "
+                   f"| {r['latency_p50_s']:.2f} / {r['latency_p99_s']:.2f} "
+                   f"| {r['modeled_peak_gb']:.3f} / {r['budget_gb']:.0f} GB "
+                   f"({'yes' if r['within_budget'] else 'NO'}) |")
+    out += ["",
+            f"{d['requests']} requests/arch, {d['slots']} slots, "
+            f"prefill chunk {d['prefill_chunk']}, long-tailed generation "
+            f"lengths {tuple(d['gen_short'])} (3/4) / {tuple(d['gen_long'])} "
+            f"(1/4)."]
+    return out
+
+
 def main() -> None:
     print("### Dispatch planning (single-sort vs two-sort, CPU)\n")
     print("\n".join(dispatch_table()))
@@ -79,6 +100,8 @@ def main() -> None:
     print("\n".join(pipeline_table()))
     print("\n### Adaptive per-layer MACT (drifting skewed load)\n")
     print("\n".join(adaptive_table()))
+    print("\n### Continuous-batching serving (mixed-length trace, CPU)\n")
+    print("\n".join(serving_table()))
 
 
 if __name__ == "__main__":

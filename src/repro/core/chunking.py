@@ -56,6 +56,18 @@ class ChunkStages(NamedTuple):
     combine: Callable
 
 
+def chunk_spans(total: int, chunk: int) -> list[tuple[int, int]]:
+    """(start, stop) spans splitting ``total`` tokens into <= ``chunk``-token
+    pieces — the serving chunked-prefill decomposition (docs/DESIGN.md
+    §Serving).  The same fine-grained-decomposition idea as ``chunked_map``,
+    but host-side: the scheduler interleaves one span per decode wave, so a
+    long prompt's prefill never holds more than one chunk's activations and
+    never stalls running requests for the whole prompt."""
+    if chunk <= 0:
+        raise ValueError(f"prefill chunk must be positive, got {chunk}")
+    return [(i, min(i + chunk, total)) for i in range(0, total, chunk)]
+
+
 def compose(stages: ChunkStages) -> Callable:
     """The sequential chunk body: combine(compute(dispatch(xc)))."""
     def fn(xc):

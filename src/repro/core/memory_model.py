@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import math
 from dataclasses import dataclass
+from typing import Optional
 
 from repro.configs.base import HardwareProfile, ModelConfig
 
@@ -239,3 +240,95 @@ def optimal_chunks(s_pp: float, s_max: float, pipeline_depth: int = 1) -> int:
     if s_max <= 0:
         return 1 << 30
     return max(pipeline_depth, 1, math.ceil(pipeline_depth * s_pp / s_max))
+
+
+# ---------------------------------------------------------------------------
+# serving variant (docs/DESIGN.md §Serving)
+# ---------------------------------------------------------------------------
+#
+# The same Eq. 1-3 decomposition, re-read for inference: static memory is
+# weight-only (no grads/optimizer, every stage resident on the serving
+# host), the per-layer activation term is a single copy (nothing is kept
+# for a backward pass), and a new state class appears that training does
+# not have — per-request decode caches, which persist across steps and
+# scale with the number of admitted requests.  The continuous-batching
+# scheduler (repro/serving/scheduler.py) admits a request only when
+#
+#   M_weights + (n+1) * M_cache(L) + max(M_act_decode, M_act_prefill)
+#       <= alpha * M_GPU                                   (Eq. 3, serving)
+#
+# with n the currently-admitted request count and L the per-request cache
+# length.  M_act's MoE term uses the *structural* worst case of the
+# dropless tp_gspmd dispatch: per-expert capacity is the full chunk
+# (core/dispatch.py::dropless_capacity), so the scatter buffer holds
+# e_n * tokens rows — the paper's "s' approaches e*s" realised by
+# construction rather than by adversarial routing.
+
+def serve_weight_bytes(cfg: ModelConfig,
+                       dtype_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+    """Serving static memory: Eq. (1) with weight-only bytes per param and
+    all stages (incl. the LM head) resident."""
+    return total_params(cfg) * dtype_bytes
+
+
+def decode_cache_bytes(cfg: ModelConfig, cache_len: int,
+                       dtype_bytes: int = 2) -> float:
+    """Per-request decode-cache bytes: KV at k_a * h_d per token per
+    attention layer (ring-bounded by the window for window/chunked layers),
+    constant SSM state + conv tail for mamba layers, and the precomputed
+    cross-attention K/V for enc-dec archs."""
+    from repro.models.ssm import dims as ssm_dims
+    total = 0.0
+    kv_row = 2 * cfg.num_kv_heads * cfg.resolved_head_dim
+    for spec in cfg.layer_specs():
+        if spec.mixer == "attn":
+            Sc = cache_len
+            if spec.attn.kind in ("window", "chunked") and spec.attn.window:
+                Sc = min(spec.attn.window, cache_len)
+            total += Sc * kv_row
+        else:
+            d_in, heads, d_conv = ssm_dims(cfg.d_model, spec.ssm)
+            total += heads * spec.ssm.head_dim * spec.ssm.state_dim
+            total += (spec.ssm.conv_width - 1) * d_conv
+        if cfg.encoder_layers:
+            total += cfg.encoder_seq * kv_row
+    return total * dtype_bytes
+
+
+def serve_act_bytes(dims: LayerDims, tokens: int, cfg: Optional[ModelConfig] = None,
+                    dtype_bytes: int = 2) -> float:
+    """Live activations for one serving wave of ``tokens`` tokens (decode:
+    one per occupied slot; prefill: the chunk size): the Eq. (2) per-layer
+    term at a single copy, plus the fp32 logits buffer, with the MoE term
+    at the dropless structural worst case s' = e_n * tokens."""
+    if tokens <= 0:
+        return 0.0
+    par = Parallelism()
+    act = shared_act_bytes(dims, tokens, par, dtype_bytes)
+    if dims.g_e:
+        s_prime = dims.e_n * tokens          # (E, cap=tokens, ·) scatter buffer
+        act += moe_act_bytes(dims, s_prime, par, dtype_bytes)
+    if cfg is not None:
+        act += tokens * cfg.padded_vocab * 4     # unembed emits fp32 logits
+    return act
+
+
+def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
+                       decode_tokens: int, prefill_tokens: int = 0,
+                       dtype_bytes: int = 2,
+                       weight_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+    """Modeled peak serving memory with ``requests`` admitted requests:
+    weights + per-request caches + the worse of the decode wave and the
+    interleaved prefill chunk (they never run concurrently — the scheduler
+    alternates them at step boundaries)."""
+    dims = LayerDims.from_config(cfg)
+    act = max(serve_act_bytes(dims, decode_tokens, cfg, dtype_bytes),
+              serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
+    return (serve_weight_bytes(cfg, weight_bytes)
+            + requests * decode_cache_bytes(cfg, cache_len, dtype_bytes)
+            + act)
+
+
+def serving_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:
+    """Eq. (3) for serving: admit only when the modeled peak fits."""
+    return serving_peak_bytes(cfg, **kw) <= hw.alpha * hw.hbm_bytes

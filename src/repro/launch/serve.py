@@ -1,50 +1,121 @@
-"""Serving launcher: batched prefill + decode on a (reduced) config.
+"""Serving launcher: continuous batching over a synthetic Poisson trace.
 
+Requests arrive as a Poisson process with per-request prompt/generation
+lengths; the continuous-batching scheduler (docs/DESIGN.md §Serving) admits
+them against the serving memory model, interleaves chunked prefill with
+decode waves, and the run reports aggregate tok/s, p50/p99 request latency
+and the modeled-peak-vs-budget memory headroom.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x7b --smoke
   PYTHONPATH=src python -m repro.launch.serve --arch gemma3-27b --smoke \
-      --batch 4 --prompt-len 32 --gen 16
+      --requests 16 --arrival-rate 4 --max-slots 4 --budget-gb 32
 """
 
 from __future__ import annotations
 
 import argparse
-import time
+
+
+def make_trace(rng, n: int, rate_hz: float, prompt_lens, gen_range,
+               vocab: int, chunk: int):
+    """n Poisson arrivals; prompt lengths are drawn from ``prompt_lens``
+    (multiples of the prefill chunk, so every chunk shape compiles once)."""
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    for S in prompt_lens:
+        if S % chunk and S > chunk:
+            raise ValueError(
+                f"--prompt-lens entry {S} is not a multiple of "
+                f"--prefill-chunk {chunk}; chunk shapes would re-trace")
+    t = 0.0
+    out = []
+    for i in range(n):
+        t += rng.exponential(1.0 / rate_hz) if rate_hz > 0 else 0.0
+        S = int(rng.choice(prompt_lens))
+        out.append(Request(
+            rid=i,
+            tokens=rng.integers(0, vocab, S).astype(np.int32),
+            max_new_tokens=int(rng.integers(gen_range[0], gen_range[1] + 1)),
+            arrival=t))
+    return out
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
-    ap.add_argument("--smoke", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (2 layers, small dims)")
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--arrival-rate", type=float, default=2.0,
+                    help="Poisson arrival rate (requests/s); 0 = all at t=0")
+    ap.add_argument("--max-slots", type=int, default=4)
+    ap.add_argument("--cache-len", type=int, default=0,
+                    help="per-request cache length (0 = max prompt + gen)")
+    ap.add_argument("--prefill-chunk", type=int, default=16)
+    ap.add_argument("--prompt-lens", default="16,32,48,64",
+                    help="comma list of prompt lengths to draw from")
+    ap.add_argument("--gen", default="4,24", help="min,max generated tokens")
+    ap.add_argument("--budget-gb", type=float, default=0.0,
+                    help="override the hardware memory budget (GB)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
+    import dataclasses
+
     import jax
-    import jax.numpy as jnp
+    import numpy as np
     from repro.configs import get_config
+    from repro.configs.base import GPU_64G
     from repro.core.moe import DistContext
-    from repro.data.pipeline import SyntheticLMData
     from repro.models import transformer
-    from repro.serving.engine import generate
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
 
     cfg = get_config(args.arch)
     if args.smoke:
         cfg = cfg.reduced()
     ctx = DistContext()
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    data = SyntheticLMData(cfg, args.prompt_len, args.batch)
-    batch = {k: jnp.asarray(v) for k, v in data.batch_at(0).items()
-             if k != "labels"}
-    t0 = time.perf_counter()
-    out = generate(params, cfg, ctx, batch, steps=args.gen,
-                   cache_len=args.prompt_len + args.gen,
-                   temperature=args.temperature,
-                   key=jax.random.PRNGKey(1))
-    dt = time.perf_counter() - t0
-    print(f"generated {out.shape} in {dt:.2f}s "
-          f"({args.batch * args.gen / dt:.1f} tok/s)")
-    print("sample:", out[0][:16].tolist())
+
+    rng = np.random.default_rng(args.seed)
+    prompt_lens = [int(s) for s in args.prompt_lens.split(",")]
+    gen_lo, gen_hi = (int(s) for s in args.gen.split(","))
+    trace = make_trace(rng, args.requests, args.arrival_rate, prompt_lens,
+                       (gen_lo, gen_hi), cfg.vocab_size, args.prefill_chunk)
+
+    cache_len = args.cache_len or max(prompt_lens) + gen_hi
+    hw = GPU_64G
+    if args.budget_gb:
+        # the flag names the admission budget itself, so alpha must not
+        # discount it a second time
+        hw = dataclasses.replace(hw, hbm_bytes=args.budget_gb * 1e9,
+                                 alpha=1.0)
+    scfg = ServeConfig(max_slots=args.max_slots, cache_len=cache_len,
+                       prefill_chunk=args.prefill_chunk, hw=hw,
+                       temperature=args.temperature)
+
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg,
+                                        key=jax.random.PRNGKey(args.seed))
+    print(f"serving {cfg.name}: {args.requests} requests, "
+          f"rate={args.arrival_rate}/s, slots={args.max_slots}, "
+          f"cache_len={cache_len}, prefill_chunk={args.prefill_chunk}")
+    m = sched.run(trace)
+
+    budget_gb = m["budget_bytes"] / 1e9
+    peak_gb = m["modeled_peak_bytes"] / 1e9
+    print(f"served {m['requests']} requests, {m['generated_tokens']} tokens "
+          f"in {m['elapsed_s']:.2f}s -> {m['tok_per_s']:.1f} tok/s")
+    print(f"latency p50={m['latency_p50_s']:.2f}s p99={m['latency_p99_s']:.2f}s "
+          f"(gen {gen_lo}-{gen_hi} tokens/request)")
+    print(f"memory: modeled peak {peak_gb:.2f} GB <= budget {budget_gb:.2f} GB "
+          f"(headroom {budget_gb - peak_gb:.2f} GB), "
+          f"max occupancy {m['max_occupancy']}/{args.max_slots} slots")
+    print(f"schedule: {m['decode_waves']} decode waves, "
+          f"{m['prefill_chunks']} interleaved prefill chunks")
+    sample = sched.finished[0]
+    print(f"sample (rid {sample.rid}): {sample.out[:12]}")
 
 
 if __name__ == "__main__":

@@ -103,6 +103,35 @@ def attention(q: jax.Array, k: jax.Array, v: jax.Array, spec: AttentionSpec,
     return jnp.concatenate(outs, axis=1)
 
 
+def extend_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     mask: jax.Array) -> jax.Array:
+    """Cache-extension attention: a C-token chunk against cached + own K/V.
+
+    q: (B, C, H, hd) — the chunk's queries; k, v: (B, Skv, KH, hd) — the
+    *pre-repeat* KV cache concatenated with the chunk's own new K/V;
+    mask: (C, Skv) bool — which key slots each query may see.  The caller
+    builds the mask from per-slot *positions* (ring layout included), so one
+    kernel serves full/window/chunked caches and the non-causal cross case
+    (docs/DESIGN.md §Serving).  This is what chunked prefill lowers: decode
+    (C == 1) stays on ``decode_attention``'s length-mask fast path.
+
+    Grouped (KH, G) GQA form, same rationale as ``decode_attention``: at
+    serving batch sizes the batch dim carries the sharding and not repeating
+    the cache saves H/KH cache-sized temporaries.
+    """
+    B, C, H, hd = q.shape
+    KH = k.shape[2]
+    G = H // KH
+    scale = hd ** -0.5
+    qg = q.reshape(B, C, KH, G, hd)
+    s = jnp.einsum("bckgd,bskd->bkgcs", qg, k,
+                   preferred_element_type=jnp.float32) * scale
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bkgcs,bskd->bckgd", p, v)
+    return out.reshape(B, C, H, hd)
+
+
 def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
                      lengths, spec: AttentionSpec) -> jax.Array:
     """Single-token decode.  q: (B, 1, H, hd); caches: (B, Sc, KH, hd);

@@ -23,7 +23,7 @@ from repro.configs.base import LayerSpec, ModelConfig
 from repro.core.chunking import ScheduleSpec
 from repro.core.moe import DistContext, init_moe, moe_ffn
 from repro.models import ssm as ssm_mod
-from repro.models.attention import attention, decode_attention
+from repro.models.attention import attention, decode_attention, extend_attention
 from repro.models.layers import (apply_mlp, apply_norm, apply_rope,
                                  init_attention, init_mlp, init_norm)
 
@@ -92,9 +92,9 @@ def _hconstrain(x: jax.Array, ctx: DistContext) -> jax.Array:
     return jax.lax.with_sharding_constraint(x, ctx.heads_pspec)
 
 
-def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
-         positions: jax.Array, ctx: DistContext):
-    from repro.models.attention import repeat_kv
+def _qkv_base(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+              positions: jax.Array):
+    """Projections + qk-norm + RoPE, KV still at KH heads (the cache layout)."""
     B, S, _ = x.shape
     H, KH, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
     q = (x @ p["wq"]).reshape(B, S, H, hd)
@@ -106,6 +106,16 @@ def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
     if spec.attn.rope:
         q = apply_rope(q, positions, cfg.rope_theta)
         k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
+         positions: jax.Array, ctx: DistContext, return_raw: bool = False):
+    from repro.models.attention import repeat_kv
+    S = x.shape[1]
+    H = cfg.num_heads
+    q, k, v = _qkv_base(p, x, cfg, spec, positions)
+    raw = (k, v)
     if S > 1:  # train/prefill: repeat KV to H so every score dim shards
         k = repeat_kv(k, H)
         v = repeat_kv(v, H)
@@ -115,16 +125,25 @@ def _qkv(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
         q = checkpoint_name(q, "qkv")
         k = checkpoint_name(k, "qkv")
         v = checkpoint_name(v, "qkv")
+    if return_raw:
+        return q, k, v, raw
     return q, k, v
 
 
 def attn_mixer(p: dict, x: jax.Array, cfg: ModelConfig, spec: LayerSpec,
                positions: jax.Array, ctx: DistContext,
-               causal: bool = True) -> jax.Array:
-    q, k, v = _qkv(p, x, cfg, spec, positions, ctx)
-    out = attention(q, k, v, spec.attn, causal=causal)
+               causal: bool = True, return_kv: bool = False):
+    """Train/prefill attention.  ``return_kv`` additionally returns the
+    pre-repeat (B, S, KH, hd) K/V — what single-pass prefill writes into the
+    decode cache (docs/DESIGN.md §Serving)."""
     B, S = x.shape[:2]
-    return out.reshape(B, S, -1) @ p["wo"]
+    if return_kv:
+        q, k, v, raw = _qkv(p, x, cfg, spec, positions, ctx, return_raw=True)
+    else:
+        q, k, v = _qkv(p, x, cfg, spec, positions, ctx)
+    out = attention(q, k, v, spec.attn, causal=causal)
+    y = out.reshape(B, S, -1) @ p["wo"]
+    return (y, raw) if return_kv else y
 
 
 def cache_len(spec: LayerSpec, seq_len: int) -> int:
@@ -157,26 +176,148 @@ def attn_mixer_decode(p: dict, x: jax.Array, cache: dict, pos: jax.Array,
 
 
 # ---------------------------------------------------------------------------
+# cache layout: single-pass prefill + chunked extension (docs/DESIGN.md §Serving)
+# ---------------------------------------------------------------------------
+
+def _is_ring(spec: LayerSpec, num_slots: int) -> bool:
+    """The decode path rings exactly when the cache is window-sized."""
+    return (spec.attn.kind in ("window", "chunked") and bool(spec.attn.window)
+            and num_slots == spec.attn.window)
+
+
+def slot_positions(spec: LayerSpec, num_slots: int, filled) -> jax.Array:
+    """Token position held by each cache slot after ``filled`` writes
+    (-1 = never written).  Linear caches hold position i at slot i; ring
+    caches hold the newest position p < filled with p % num_slots == i."""
+    i = jnp.arange(num_slots)
+    if _is_ring(spec, num_slots):
+        pos = i + ((filled - 1 - i) // num_slots) * num_slots
+    else:
+        pos = i
+    return jnp.where(i < filled, jnp.maximum(pos, i), -1)
+
+
+def build_attn_cache(k: jax.Array, v: jax.Array, spec: LayerSpec,
+                     total_len: int, dtype) -> dict:
+    """Lay a prompt's (B, S, KH, hd) K/V out as the decode cache the replay
+    loop would have produced, bit-for-bit: linear caches get the prompt at
+    slots 0..S-1, ring caches the last ``window`` tokens at slots p % W."""
+    B, S = k.shape[:2]
+    Sc = cache_len(spec, total_len)
+    ring = _is_ring(spec, Sc)
+    if S > Sc and not ring:
+        raise ValueError(f"prompt length {S} exceeds the {Sc}-slot linear "
+                         f"cache (cache_len={total_len})")
+
+    def lay(t):
+        t = t.astype(dtype)
+        if ring and S >= Sc:
+            return jnp.roll(t[:, S - Sc:], (S - Sc) % Sc, axis=1)
+        buf = jnp.zeros((B, Sc) + t.shape[2:], dtype)
+        return jax.lax.dynamic_update_slice_in_dim(buf, t, 0, axis=1)
+
+    return {"k": lay(k), "v": lay(v)}
+
+
+def write_attn_cache(cache: dict, k: jax.Array, v: jax.Array, pos0,
+                     spec: LayerSpec) -> dict:
+    """Write a C-token chunk starting at position ``pos0`` into the cache,
+    ring or linear — the multi-token generalisation of the decode write."""
+    Sc = cache["k"].shape[1]
+    C = k.shape[1]
+    if _is_ring(spec, Sc):
+        if C >= Sc:           # only the last Sc tokens survive a full wrap
+            k, v, pos0, C = k[:, C - Sc:], v[:, C - Sc:], pos0 + C - Sc, Sc
+        idx = (pos0 + jnp.arange(C)) % Sc
+        return {"k": cache["k"].at[:, idx].set(k.astype(cache["k"].dtype)),
+                "v": cache["v"].at[:, idx].set(v.astype(cache["v"].dtype))}
+    return {"k": jax.lax.dynamic_update_slice_in_dim(
+                cache["k"], k.astype(cache["k"].dtype), pos0, axis=1),
+            "v": jax.lax.dynamic_update_slice_in_dim(
+                cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)}
+
+
+def _extend_mask(spec: LayerSpec, key_pos: jax.Array,
+                 q_pos: jax.Array) -> jax.Array:
+    """(C, Skv) visibility: causal over key *positions* (-1 = empty slot),
+    window-banded / chunk-local per the attention kind."""
+    m = (key_pos[None, :] >= 0) & (key_pos[None, :] <= q_pos[:, None])
+    if spec.attn.kind == "window" and spec.attn.window:
+        m &= key_pos[None, :] > q_pos[:, None] - spec.attn.window
+    elif spec.attn.kind == "chunked" and spec.attn.window:
+        m &= (key_pos[None, :] // spec.attn.window
+              == q_pos[:, None] // spec.attn.window)
+    return m
+
+
+def attn_mixer_extend(p: dict, x: jax.Array, cache: dict, pos0,
+                      cfg: ModelConfig, spec: LayerSpec, ctx: DistContext):
+    """x: (B, C, d) chunk at positions pos0..pos0+C-1.  Attends over the
+    cache-before-this-chunk plus the chunk's own K/V (so ring overwrites
+    within the chunk cannot clobber still-visible keys), then writes the
+    chunk into the cache.  Returns (y, new {"k","v"})."""
+    B, C, _ = x.shape
+    positions = pos0 + jnp.arange(C)
+    q, k, v = _qkv_base(p, x, cfg, spec,
+                        jnp.broadcast_to(positions, (B, C)))
+    Sc = cache["k"].shape[1]
+    key_pos = jnp.concatenate([slot_positions(spec, Sc, pos0), positions])
+    mask = _extend_mask(spec, key_pos, positions)
+    k_cat = jnp.concatenate([cache["k"], k.astype(cache["k"].dtype)], axis=1)
+    v_cat = jnp.concatenate([cache["v"], v.astype(cache["v"].dtype)], axis=1)
+    out = extend_attention(q, k_cat, v_cat, mask)
+    y = out.reshape(B, C, -1) @ p["wo"]
+    return y, write_attn_cache(cache, k, v, pos0, spec)
+
+
+# ---------------------------------------------------------------------------
 # whole layer
 # ---------------------------------------------------------------------------
 
 def apply_layer(params: dict, x: jax.Array, spec: LayerSpec, cfg: ModelConfig,
                 ctx: DistContext, positions: jax.Array, *,
-                causal: bool = True, enc_out: Optional[jax.Array] = None):
-    """Train/prefill.  Returns (x, stats)."""
+                causal: bool = True, enc_out: Optional[jax.Array] = None,
+                cache_len: Optional[int] = None, cache_dtype=None):
+    """Train/prefill.  Returns (x, stats), or (x, stats, cache) when
+    ``cache_len`` is given — the single-pass-prefill path (docs/DESIGN.md
+    §Serving): the layer's decode cache is built from the same forward pass
+    (K/V as computed, ring-laid for window/chunked layers; SSD final state +
+    conv tail for mamba; precomputed cross K/V for enc-dec).  Prefill is
+    never differentiated, so the cache path skips the remat wrapper."""
+    build_cache = cache_len is not None
+    if cache_dtype is None:
+        cache_dtype = x.dtype
 
     def layer_fn(x):
+        cache: dict = {}
         h = apply_norm(params["norm1"], x, cfg.norm)
         if spec.mixer == "attn":
-            h = attn_mixer(params["mixer"], h, cfg, spec, positions, ctx, causal)
+            if build_cache:
+                h, (k_raw, v_raw) = attn_mixer(params["mixer"], h, cfg, spec,
+                                               positions, ctx, causal,
+                                               return_kv=True)
+                cache["attn"] = build_attn_cache(k_raw, v_raw, spec,
+                                                 cache_len, cache_dtype)
+            else:
+                h = attn_mixer(params["mixer"], h, cfg, spec, positions, ctx,
+                               causal)
         else:
-            h = ssm_mod.apply_ssm(params["mixer"], h, spec.ssm)
+            if build_cache:
+                h, state = ssm_mod.apply_ssm(params["mixer"], h, spec.ssm,
+                                             return_state=True)
+                cache["ssm"] = jax.tree.map(lambda a: a.astype(cache_dtype),
+                                            state._asdict())
+            else:
+                h = ssm_mod.apply_ssm(params["mixer"], h, spec.ssm)
         x = x + h
         if "cross" in params and enc_out is not None:
             h = apply_norm(params["norm_x"], x, cfg.norm)
             q, k, v = _cross_qkv(params["cross"], h, enc_out, cfg)
             o = attention(q, k, v, spec.attn, causal=False)
             x = x + o.reshape(*x.shape[:2], -1) @ params["cross"]["wo"]
+            if build_cache:
+                cache["cross_k"] = k.astype(cache_dtype)
+                cache["cross_v"] = v.astype(cache_dtype)
         stats = zero_stats(cfg)
         if spec.ffn != "none":
             h = apply_norm(params["norm2"], x, cfg.norm)
@@ -185,8 +326,12 @@ def apply_layer(params: dict, x: jax.Array, spec: LayerSpec, cfg: ModelConfig,
             else:
                 h, stats = moe_ffn(params["ffn"], h, cfg.moe, ctx)
             x = x + h
+        if build_cache:
+            return x, stats, cache
         return x, stats
 
+    if build_cache:
+        return layer_fn(x)
     if cfg.remat_policy in ("full", "memfine"):
         layer_fn = jax.checkpoint(layer_fn)
     elif cfg.remat_policy == "selective":
@@ -231,6 +376,43 @@ def apply_layer_decode(params: dict, x: jax.Array, cache, spec: LayerSpec,
         o = decode_attention(q, cache["cross_k"], cache["cross_v"],
                              Se * jnp.ones((B,), jnp.int32), spec.attn)
         x = x + o.reshape(B, 1, -1) @ params["cross"]["wo"]
+    if spec.ffn != "none":
+        h = apply_norm(params["norm2"], x, cfg.norm)
+        if spec.ffn == "dense":
+            h = apply_mlp(params["ffn"], h)
+        else:
+            h, _ = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+        x = x + h
+    return x, cache
+
+
+def apply_layer_extend(params: dict, x: jax.Array, cache, spec: LayerSpec,
+                       cfg: ModelConfig, ctx: DistContext, pos0):
+    """C-token cache extension (serving chunked prefill, docs/DESIGN.md
+    §Serving).  x: (B, C, d) at positions pos0..pos0+C-1.  Returns
+    (x, cache) — the multi-token generalisation of ``apply_layer_decode``."""
+    B, C, _ = x.shape
+    h = apply_norm(params["norm1"], x, cfg.norm)
+    if spec.mixer == "attn":
+        h, new_attn = attn_mixer_extend(params["mixer"], h, cache["attn"],
+                                        pos0, cfg, spec, ctx)
+        cache = {**cache, "attn": new_attn}
+    else:
+        h, new_state = ssm_mod.apply_ssm(
+            params["mixer"], h, spec.ssm, return_state=True,
+            initial_state=ssm_mod.SSMState(**cache["ssm"]))
+        cache = {**cache,
+                 "ssm": jax.tree.map(lambda a, o: a.astype(o.dtype),
+                                     new_state._asdict(), cache["ssm"])}
+    x = x + h
+    if "cross" in params and "cross_k" in cache:
+        h = apply_norm(params["norm_x"], x, cfg.norm)
+        H, hd = cfg.num_heads, cfg.resolved_head_dim
+        q = (h @ params["cross"]["wq"]).reshape(B, C, H, hd)
+        Se = cache["cross_k"].shape[1]
+        mask = jnp.ones((C, Se), bool)          # cross attention: non-causal
+        o = extend_attention(q, cache["cross_k"], cache["cross_v"], mask)
+        x = x + o.reshape(B, C, -1) @ params["cross"]["wo"]
     if spec.ffn != "none":
         h = apply_norm(params["norm2"], x, cfg.norm)
         if spec.ffn == "dense":

@@ -121,20 +121,32 @@ def ssd_scan(x: jax.Array, dt: jax.Array, A: jax.Array, B: jax.Array,
 
 
 def apply_ssm(params: dict, x: jax.Array, spec: SSMSpec,
-              return_state: bool = False):
-    """Training/prefill.  x: (B, T, d_model) -> (B, T, d_model)."""
+              return_state: bool = False,
+              initial_state: SSMState | None = None):
+    """Training/prefill.  x: (B, T, d_model) -> (B, T, d_model).
+
+    ``initial_state`` continues from a prior prefix (serving chunked
+    prefill, docs/DESIGN.md §Serving): the conv tail is the prefix's pre-conv
+    history and the SSD scan starts from the prefix's recurrent state.
+    """
     d_model = x.shape[-1]
     d_in, heads, d_conv = dims(d_model, spec)
     N = spec.state_dim
     zxbcdt = x @ params["in_proj"]
     z, xBC, dt = jnp.split(zxbcdt, [d_in, d_in + d_conv], axis=-1)
-    conv_tail = xBC[:, -(spec.conv_width - 1):, :]                # pre-conv history
-    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"])
+    hist = xBC if initial_state is None else jnp.concatenate(
+        [initial_state.conv.astype(xBC.dtype), xBC], axis=1)
+    conv_tail = hist[:, max(0, hist.shape[1] - (spec.conv_width - 1)):, :]  # pre-conv history
+    xBC = _causal_conv(xBC, params["conv_w"], params["conv_b"],
+                       tail=None if initial_state is None else
+                       initial_state.conv.astype(xBC.dtype))
     xs, B, C = jnp.split(xBC, [d_in, d_in + N], axis=-1)
     dt = jax.nn.softplus(dt.astype(jnp.float32) + params["dt_bias"]).astype(x.dtype)
     A = -jnp.exp(params["A_log"]).astype(x.dtype)
     xh = xs.reshape(*xs.shape[:-1], heads, spec.head_dim)
-    y, final = ssd_scan(xh, dt, A, B, C, min(spec.chunk, x.shape[1]))
+    y, final = ssd_scan(xh, dt, A, B, C, min(spec.chunk, x.shape[1]),
+                        initial_state=None if initial_state is None else
+                        initial_state.ssm.astype(x.dtype))
     y = y + params["D"].astype(x.dtype)[:, None] * xh
     y = y.reshape(*x.shape[:-1], d_in)
     y = apply_norm(params["norm"], y * jax.nn.silu(z))

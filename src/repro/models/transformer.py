@@ -133,7 +133,9 @@ def num_moe_layers(cfg: ModelConfig) -> int:
     return sum(1 for s in cfg.layer_specs() if s.ffn == "moe")
 
 
-def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
+def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict, *,
+            return_cache: bool = False, cache_len: Optional[int] = None,
+            cache_dtype=jnp.float32):
     """Returns (logits: (B, S, V) f32, stats: summed MoE stats).
 
     For MoE configs ``stats`` additionally carries ``load_per_layer``, the
@@ -145,6 +147,13 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
     is unrolled (per-layer schedules are static, and a scan body is one
     trace), while a vector uniform across periods keeps the O(period) HLO —
     and reproduces the global path bit-for-bit.
+
+    ``return_cache=True`` is the single-pass serving prefill
+    (docs/DESIGN.md §Serving): every layer additionally emits its decode
+    cache (K/V rings, SSM state, cross K/V), laid out exactly as
+    ``init_cache`` + token-by-token replay would have produced, and the
+    return becomes (logits, stats, cache).  ``cache_len`` sizes the caches
+    (default: the prompt length); linear caches require cache_len >= S.
     """
     if ctx.layer_schedules is not None:
         want = num_moe_layers(cfg)
@@ -158,27 +167,36 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
     x = embed_inputs(params, cfg, batch)
     x = _constrain(x, ctx.act_pspec)
     B, S, _ = x.shape
+    total_len = (cache_len if cache_len is not None else S) if return_cache else None
+    cache_kw = (dict(cache_len=total_len, cache_dtype=cache_dtype)
+                if return_cache else {})
     positions = jnp.broadcast_to(jnp.arange(S), (B, S))
     pattern = cfg.pattern
     stats_total = blocks.zero_stats(cfg)
     E = cfg.moe.num_experts if cfg.moe else 1
     layer_loads: list = []        # (n, E) pieces, MoE-layer order
     moe_idx = 0                   # position in the per-layer schedule vector
+    cache: dict = {"pos": jnp.int32(S)}
 
     def run_layer(layer_params, x, spec, moe_idx):
         lctx = blocks.layer_ctx(ctx, moe_idx if spec.ffn == "moe" else None)
-        x, st = blocks.apply_layer(layer_params, x, spec, cfg, lctx,
-                                   positions, enc_out=enc_out)
-        return _constrain(x, ctx.act_pspec), st
+        out = blocks.apply_layer(layer_params, x, spec, cfg, lctx,
+                                 positions, enc_out=enc_out, **cache_kw)
+        x, st = out[0], out[1]
+        lc = out[2] if return_cache else None
+        return _constrain(x, ctx.act_pspec), st, lc
 
+    cache["pre"] = []
     for i, layer_params in enumerate(params.get("pre", [])):
         spec = cfg.prefix[i]
-        x, st = run_layer(layer_params, x, spec, moe_idx)
+        x, st, lc = run_layer(layer_params, x, spec, moe_idx)
+        cache["pre"].append(lc)
         stats_total = jax.tree.map(jnp.add, stats_total, st)
         if spec.ffn == "moe":
             layer_loads.append(st["load"][None])
             moe_idx += 1
 
+    cache["periods"] = None
     if params["periods"] is not None:
         np_ = cfg.num_periods
         n_moe_pat = sum(1 for s in pattern if s.ffn == "moe")
@@ -202,42 +220,56 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
             def body(x, period_params):
                 stats_p = blocks.zero_stats(cfg)
                 loads_p = []
+                caches_p = []
                 for i, spec in enumerate(pattern):
-                    x, st = blocks.apply_layer(period_params[i], x, spec, cfg,
-                                               pat_ctx[i], positions,
-                                               enc_out=enc_out)
+                    out = blocks.apply_layer(period_params[i], x, spec, cfg,
+                                             pat_ctx[i], positions,
+                                             enc_out=enc_out, **cache_kw)
+                    x, st = out[0], out[1]
+                    caches_p.append(out[2] if return_cache else None)
                     stats_p = jax.tree.map(jnp.add, stats_p, st)
                     if spec.ffn == "moe":
                         loads_p.append(st["load"])
                 x = _constrain(x, ctx.act_pspec)
                 loads_p = (jnp.stack(loads_p) if loads_p
                            else jnp.zeros((0, E), jnp.float32))
-                return x, (stats_p, loads_p)
+                return x, (stats_p, loads_p, caches_p)
 
-            x, (stats_stack, loads_stack) = jax.lax.scan(body, x,
-                                                         params["periods"])
+            x, (stats_stack, loads_stack, caches_stack) = jax.lax.scan(
+                body, x, params["periods"])
             stats_total = jax.tree.map(lambda a, s: a + s.sum(0), stats_total,
                                        stats_stack)
+            if return_cache:
+                cache["periods"] = caches_stack   # scan stacks over periods
             if n_moe_pat:
                 layer_loads.append(loads_stack.reshape(np_ * n_moe_pat, E))
         else:
             # heterogeneous schedules inside the scanned region: unroll the
             # periods so each layer compiles under its own (bin, depth)
+            period_caches = []
             for p in range(np_):
                 period_params = jax.tree.map(lambda a, p=p: a[p],
                                              params["periods"])
+                caches_p = []
                 for i, spec in enumerate(pattern):
-                    x, st = run_layer(period_params[i], x, spec, moe_idx)
+                    x, st, lc = run_layer(period_params[i], x, spec, moe_idx)
+                    caches_p.append(lc)
                     stats_total = jax.tree.map(jnp.add, stats_total, st)
                     if spec.ffn == "moe":
                         layer_loads.append(st["load"][None])
                         moe_idx += 1
+                period_caches.append(caches_p)
+            if return_cache:
+                cache["periods"] = jax.tree.map(lambda *xs: jnp.stack(xs),
+                                                *period_caches)
         if uniform:
             moe_idx += np_ * n_moe_pat
 
+    cache["rem"] = []
     for i, layer_params in enumerate(params["rem"]):
         spec = pattern[i % len(pattern)]
-        x, st = run_layer(layer_params, x, spec, moe_idx)
+        x, st, lc = run_layer(layer_params, x, spec, moe_idx)
+        cache["rem"].append(lc)
         stats_total = jax.tree.map(jnp.add, stats_total, st)
         if spec.ffn == "moe":
             layer_loads.append(st["load"][None])
@@ -250,6 +282,8 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict):
 
     logits = unembed(params, cfg, x)
     logits = _constrain(logits, ctx.logits_pspec)
+    if return_cache:
+        return logits, stats_total, cache
     return logits, stats_total
 
 
@@ -327,6 +361,59 @@ def decode_step(params: dict, cfg: ModelConfig, ctx: DistContext,
         spec = pattern[i % len(pattern)]
         x, c = blocks.apply_layer_decode(layer_params, x, cache["rem"][i],
                                          spec, cfg, ctx, pos)
+        new_rem.append(c)
+    new_cache["rem"] = new_rem
+
+    logits = unembed(params, cfg, x)
+    return logits, new_cache
+
+
+def extend_step(params: dict, cfg: ModelConfig, ctx: DistContext,
+                cache: dict, tokens: jax.Array):
+    """tokens: (B, C) -> (logits (B, C, V), new cache).  Multi-token cache
+    extension — the serving chunked-prefill continuation (docs/DESIGN.md
+    §Serving): each chunk attends over the cache so far plus itself, then
+    its K/V joins the cache.  ``decode_step`` is the C == 1 special case
+    (kept separate: decode stays on the length-mask fast path)."""
+    pos0 = cache["pos"]
+    B, C = tokens.shape
+    x = jnp.take(params["embed"], tokens, axis=0)
+    if cfg.learned_pos:
+        idx = jnp.clip(pos0 + jnp.arange(C), 0, cfg.learned_pos - 1)
+        x = x + jnp.take(params["pos_embed"], idx, axis=0)[None]
+    x = x.astype(params["embed"].dtype)
+    pattern = cfg.pattern
+    new_cache: dict = {"pos": pos0 + C}
+
+    new_pre = []
+    for i, layer_params in enumerate(params.get("pre", [])):
+        x, c = blocks.apply_layer_extend(layer_params, x, cache["pre"][i],
+                                         cfg.prefix[i], cfg, ctx, pos0)
+        new_pre.append(c)
+    new_cache["pre"] = new_pre
+
+    if params["periods"] is not None:
+        def body(x, inp):
+            period_params, period_cache = inp
+            new_pc = []
+            for i, spec in enumerate(pattern):
+                x, c = blocks.apply_layer_extend(period_params[i], x,
+                                                 period_cache[i], spec, cfg,
+                                                 ctx, pos0)
+                new_pc.append(c)
+            return x, new_pc
+
+        x, new_periods = jax.lax.scan(body, x, (params["periods"],
+                                                cache["periods"]))
+        new_cache["periods"] = new_periods
+    else:
+        new_cache["periods"] = None
+
+    new_rem = []
+    for i, layer_params in enumerate(params["rem"]):
+        spec = pattern[i % len(pattern)]
+        x, c = blocks.apply_layer_extend(layer_params, x, cache["rem"][i],
+                                         spec, cfg, ctx, pos0)
         new_rem.append(c)
     new_cache["rem"] = new_rem
 

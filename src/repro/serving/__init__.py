@@ -1,1 +1,5 @@
-from repro.serving.engine import init_serve_cache, make_serve_step, prefill
+from repro.serving.engine import (generate, get_decode_step, get_extend_step,
+                                  init_serve_cache, make_serve_step, prefill,
+                                  prefill_chunked, prefill_replay)
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     ServeConfig)

@@ -1,20 +1,32 @@
-"""Batched serving: prefill + single-token serve_step over static KV caches.
+"""Serving engine: single-pass batched prefill + compiled decode/extend steps.
 
 ``serve_step`` is what the decode_32k / long_500k dry-run shapes lower: ONE
 new token against a cache of ``seq_len`` entries.  Window/chunked-attention
 layers keep ring caches bounded by their window (how long_500k decode stays
 affordable for mixtral/gemma3/llama4); SSM layers carry constant-size state.
+
+Prefill is a SINGLE ``transformer.forward`` pass that writes every layer's
+decode cache as it goes (``return_cache=True``, docs/DESIGN.md §Serving) —
+replacing the old token-by-token replay loop, which dispatched O(S) compiled
+decode steps per prompt.  The replay survives as ``prefill_replay``, the
+reference oracle the cache-layout parity tests compare against.
+
+Compiled steps are hoisted into a per-(cfg, ctx) cache: the old code wrapped
+``jax.jit(functools.partial(...))`` inside every ``prefill``/``generate``
+call, so each invocation re-traced the decode step from scratch.  On
+non-CPU backends the decode step donates its cache argument, updating K/V
+rings in place.
 """
 
 from __future__ import annotations
 
-import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
+from repro.core.chunking import chunk_spans
 from repro.core.moe import DistContext
 from repro.models import transformer
 
@@ -34,34 +46,160 @@ def make_serve_step(cfg: ModelConfig, ctx: DistContext):
     return serve_step
 
 
+# ---------------------------------------------------------------------------
+# compiled-step cache: one trace per (cfg, ctx), not one per call
+# ---------------------------------------------------------------------------
+
+_STEP_CACHE: dict = {}
+
+
+def step_cache_info() -> dict:
+    """Snapshot of the compiled-step cache keys (tests/observability)."""
+    return {"entries": len(_STEP_CACHE)}
+
+
+def clear_step_cache() -> None:
+    _STEP_CACHE.clear()
+
+
+def _cached(key, build):
+    """Memoise ``build()`` under ``key``; unhashable keys (exotic mesh
+    objects in a ctx) simply skip the cache rather than fail."""
+    try:
+        fn = _STEP_CACHE.get(key)
+    except TypeError:
+        return build()
+    if fn is None:
+        fn = build()
+        _STEP_CACHE[key] = fn
+    return fn
+
+
+def _jit(fn, donate_cache_arg: Optional[int] = None):
+    if donate_cache_arg is not None and jax.default_backend() != "cpu":
+        # steady-state decode rewrites the whole cache every step: donating
+        # it lets XLA update the K/V rings in place instead of allocating a
+        # second full-size cache per step
+        return jax.jit(fn, donate_argnums=(donate_cache_arg,))
+    return jax.jit(fn)
+
+
+def get_decode_step(cfg: ModelConfig, ctx: DistContext):
+    """The compiled single-token step(params, cache, tokens (B,1))."""
+    def build():
+        def fn(params, cache, tokens):
+            return transformer.decode_step(params, cfg, ctx, cache, tokens)
+        return _jit(fn, donate_cache_arg=1)
+    return _cached(("decode", cfg, ctx), build)
+
+
+def get_extend_step(cfg: ModelConfig, ctx: DistContext):
+    """The compiled chunk step(params, cache, tokens (B,C)) — chunked
+    prefill continuation."""
+    def build():
+        def fn(params, cache, tokens):
+            return transformer.extend_step(params, cfg, ctx, cache, tokens)
+        return _jit(fn, donate_cache_arg=1)
+    return _cached(("extend", cfg, ctx), build)
+
+
+def get_prefill_fn(cfg: ModelConfig, ctx: DistContext, cache_len: int,
+                   dtype=jnp.float32):
+    """The compiled single-pass prefill(params, batch) -> (logits, cache)."""
+    dtype = jnp.dtype(dtype)
+
+    def build():
+        def fn(params, batch):
+            logits, _stats, cache = transformer.forward(
+                params, cfg, ctx, batch, return_cache=True,
+                cache_len=cache_len, cache_dtype=dtype)
+            return logits[:, -1:], cache
+        return _jit(fn)
+    return _cached(("prefill", cfg, ctx, cache_len, dtype.name), build)
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
 def prefill(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict,
             cache_len: int, dtype=jnp.float32):
-    """Run the prompt through the forward pass, then replay it into a decode
-    cache (token-by-token cache fill is exact for every cache variant).
+    """Single-pass batched prefill: ONE forward pass writes K/V rings, SSM
+    state and cross K/V for every layer (docs/DESIGN.md §Serving).
 
-    Returns (next_token_logits, cache).  For production prefill one would
-    write K/V during the forward pass; replay keeps a single code path for
-    full/window/chunked/ssm caches and is used by tests and examples.
+    Returns (next_token_logits (B, 1, V), cache) — the same contract as the
+    replay it replaces.  Cache contents are bit-identical to the replay's
+    given the same layer inputs (the layout math is identical; deep layers
+    agree to float tolerance because replay's decode-attention and
+    forward's blocked attention round the residual stream differently —
+    tests/test_serving.py pins both properties).
     """
+    return get_prefill_fn(cfg, ctx, cache_len, dtype)(params, batch)
+
+
+def prefill_replay(params: dict, cfg: ModelConfig, ctx: DistContext,
+                   batch: dict, cache_len: int, dtype=jnp.float32):
+    """Token-by-token replay prefill — O(S) compiled-step dispatches.  Kept
+    as the reference oracle for cache-layout parity tests; production
+    callers use ``prefill``."""
     tokens = batch["tokens"]
     B, S = tokens.shape
     enc_out = None
     if cfg.encoder_layers:
         enc_out = transformer.encode(params, cfg, batch["frames"], ctx)
     cache = init_serve_cache(params, cfg, B, cache_len, dtype, enc_out=enc_out)
-    step = jax.jit(functools.partial(transformer.decode_step, params, cfg, ctx))
+    step = get_decode_step(cfg, ctx)
     logits = None
     for i in range(S):
-        logits, cache = step(cache, tokens[:, i:i + 1])
+        logits, cache = step(params, cache, tokens[:, i:i + 1])
     return logits, cache
 
+
+def prefill_chunk(params: dict, cfg: ModelConfig, ctx: DistContext,
+                  cache, seg: jax.Array, cache_len: int, dtype=jnp.float32):
+    """One chunked-prefill span: the first (``cache is None``) runs the
+    single-pass prefill, later spans the compiled extend step.  The single
+    dispatch point shared by ``prefill_chunked`` and the scheduler's
+    interleave.  Returns (next_token_logits (B, 1, V), cache)."""
+    if cache is None:
+        return prefill(params, cfg, ctx, {"tokens": seg}, cache_len, dtype)
+    full, cache = get_extend_step(cfg, ctx)(params, cache, seg)
+    return full[:, -1:], cache
+
+
+def prefill_chunked(params: dict, cfg: ModelConfig, ctx: DistContext,
+                    tokens: jax.Array, cache_len: int, chunk: int,
+                    dtype=jnp.float32):
+    """Prefill a (B, S) prompt in <= ``chunk``-token pieces: the first span
+    through the single-pass prefill, the rest through compiled extend
+    steps.  What the scheduler interleaves between decode waves; also
+    usable standalone to bound prefill activation memory for long prompts.
+    Returns (next_token_logits (B, 1, V), cache)."""
+    S = tokens.shape[1]
+    if S > cache_len:
+        # the extend path cannot check this itself: chunk write positions
+        # are traced, and dynamic_update_slice would silently clamp a
+        # linear-cache overflow instead of raising
+        raise ValueError(f"prompt length {S} exceeds cache_len {cache_len}")
+    logits = cache = None
+    for start, stop in chunk_spans(S, chunk):
+        logits, cache = prefill_chunk(params, cfg, ctx, cache,
+                                      tokens[:, start:stop], cache_len, dtype)
+    return logits, cache
+
+
+# ---------------------------------------------------------------------------
+# generation
+# ---------------------------------------------------------------------------
 
 def generate(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict,
              steps: int, cache_len: int, temperature: float = 0.0,
              key: Optional[jax.Array] = None):
     """Greedy/temperature batched generation (example + test driver)."""
     logits, cache = prefill(params, cfg, ctx, batch, cache_len)
-    step = jax.jit(functools.partial(transformer.decode_step, params, cfg, ctx))
+    step = get_decode_step(cfg, ctx)
+    if temperature > 0 and key is None:
+        key = jax.random.PRNGKey(0)   # seeded default; split(None) crashed
     out = []
     for i in range(steps):
         if temperature > 0:
@@ -70,5 +208,5 @@ def generate(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict,
         else:
             nxt = jnp.argmax(logits[:, -1], axis=-1)
         out.append(nxt)
-        logits, cache = step(cache, nxt[:, None].astype(jnp.int32))
+        logits, cache = step(params, cache, nxt[:, None].astype(jnp.int32))
     return jnp.stack(out, axis=1)

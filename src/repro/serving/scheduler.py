@@ -1,0 +1,292 @@
+"""Continuous-batching scheduler on the MemFine serving memory model.
+
+MemFine's core move — decompose MoE work into chunks and plan them against a
+theoretical memory model — applied to serving (docs/DESIGN.md §Serving):
+
+* **Slot map.**  The decode batch is a fixed-capacity pool of ``max_slots``
+  per-request cache slots; the compiled decode step is the single-token
+  ``transformer.decode_step`` vmapped over slots, so every slot carries its
+  own position (ring write cursors included) and requests join/leave at step
+  boundaries without retracing.
+* **Admission control.**  A queued request starts only when the serving
+  memory model (core/memory_model.py::serving_fits — weights + per-request
+  caches + the worse of a decode wave and a prefill chunk) says the modeled
+  peak still fits ``alpha * M_GPU``.  Occupancy, not allocation, is what the
+  model bounds: the pool is allocated once at ``max_slots``, and a budget
+  below the full pool simply admits fewer concurrent requests.
+* **Chunked prefill interleave.**  Long prompts are split by
+  ``core/chunking.py::chunk_spans`` and prefilled one chunk per scheduler
+  step between decode waves — the FCDA idea at the request level: bounded
+  prefill activations, bounded decode-latency impact.  The first chunk runs
+  the single-pass prefill (``transformer.forward(return_cache=True)``), the
+  rest the compiled extend step.
+
+Request lifecycle: WAITING -> PREFILL -> ACTIVE -> FINISHED.  One request
+prefills at a time; its slot is reserved at admission so installation can
+never fail.
+"""
+
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import GPU_64G, HardwareProfile, ModelConfig
+from repro.core import memory_model as mm
+from repro.core.chunking import chunk_spans
+from repro.core.moe import DistContext
+from repro.models import transformer
+from repro.serving import engine
+
+WAITING, PREFILL, ACTIVE, FINISHED = "waiting", "prefill", "active", "finished"
+
+
+@dataclass
+class Request:
+    rid: int
+    tokens: np.ndarray                  # (S,) int32 prompt
+    max_new_tokens: int
+    arrival: float = 0.0                # seconds after scheduler start
+    # -- runtime (scheduler-owned) -----------------------------------------
+    state: str = WAITING
+    slot: int = -1
+    chunks_done: int = 0
+    cache: object = None                # private (B=1) cache while prefilling
+    next_token: int = -1
+    out: list = field(default_factory=list)
+    t_first: Optional[float] = None     # first-token time (s after start)
+    t_done: Optional[float] = None
+
+
+@dataclass(frozen=True)
+class ServeConfig:
+    max_slots: int = 4
+    cache_len: int = 128
+    prefill_chunk: int = 32
+    hw: HardwareProfile = GPU_64G
+    dtype_bytes: int = 2                # modeled cache/act bytes (bf16 target;
+                                        # the CPU dry-run holds f32, the model
+                                        # describes the production target)
+    weight_bytes: float = mm.WEIGHT_ONLY_BYTES
+    temperature: float = 0.0
+
+
+class ContinuousBatchingScheduler:
+    def __init__(self, params: dict, cfg: ModelConfig, ctx: DistContext,
+                 scfg: ServeConfig, key: Optional[jax.Array] = None):
+        if cfg.encoder_layers or cfg.num_patch_tokens:
+            raise ValueError("continuous batching serves token-only decoders; "
+                             f"{cfg.name!r} needs per-request encoder state")
+        self.params, self.cfg, self.ctx, self.scfg = params, cfg, ctx, scfg
+        self.key = key if key is not None else jax.random.PRNGKey(0)
+        self.queue: deque[Request] = deque()
+        self.active: dict[int, Request] = {}          # slot -> request
+        self.free_slots = list(range(scfg.max_slots))
+        self._prefilling: Optional[Request] = None
+        one = transformer.init_cache(params, cfg, 1, scfg.cache_len,
+                                     jnp.float32)
+        self.cache = jax.tree.map(
+            lambda l: jnp.broadcast_to(l[None], (scfg.max_slots,) + l.shape),
+            one)
+        # donate the slot-pool cache off-CPU (engine._jit), same rationale
+        # as the engine's decode step: waves rewrite every ring in place
+        self._decode = engine._jit(jax.vmap(
+            lambda p, c, t: transformer.decode_step(p, cfg, ctx, c, t),
+            in_axes=(None, 0, 0)), donate_cache_arg=1)
+        # telemetry / invariants
+        self.steps = 0
+        self.decode_waves = 0
+        self.prefill_chunks = 0
+        self.max_occupancy = 0
+        self.modeled_peak = 0.0
+        self.admission_order: list[int] = []
+        self.finished: list[Request] = []
+
+    def reset(self) -> None:
+        """Clear all request state and telemetry but keep the compiled
+        steps and the allocated slot pool — benchmarks warm the compile
+        caches with a throwaway trace, reset, then time steady-state."""
+        self.queue.clear()
+        self.active.clear()
+        self.free_slots = list(range(self.scfg.max_slots))
+        self._prefilling = None
+        self.steps = self.decode_waves = self.prefill_chunks = 0
+        self.max_occupancy = 0
+        self.modeled_peak = 0.0
+        self.admission_order = []
+        self.finished = []
+
+    # -- memory model -------------------------------------------------------
+
+    def occupancy(self) -> int:
+        """Requests currently holding cache memory (installed + prefilling)."""
+        return len(self.active) + (1 if self._prefilling is not None else 0)
+
+    def modeled_bytes(self, requests: Optional[int] = None) -> float:
+        s = self.scfg
+        return mm.serving_peak_bytes(
+            self.cfg, requests=self.occupancy() if requests is None else requests,
+            cache_len=s.cache_len, decode_tokens=s.max_slots,
+            prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
+            weight_bytes=s.weight_bytes)
+
+    def _admissible(self, requests: int) -> bool:
+        s = self.scfg
+        return mm.serving_fits(
+            self.cfg, s.hw, requests=requests, cache_len=s.cache_len,
+            decode_tokens=s.max_slots, prefill_tokens=s.prefill_chunk,
+            dtype_bytes=s.dtype_bytes, weight_bytes=s.weight_bytes)
+
+    # -- request intake -----------------------------------------------------
+
+    def submit(self, req: Request) -> None:
+        s = self.scfg
+        if len(req.tokens) + req.max_new_tokens > s.cache_len:
+            raise ValueError(
+                f"request {req.rid}: prompt {len(req.tokens)} + gen "
+                f"{req.max_new_tokens} exceeds cache_len {s.cache_len}")
+        if not self._admissible(1):
+            raise ValueError(
+                f"request {req.rid} can never be admitted: modeled bytes for "
+                f"one request ({self.modeled_bytes(1) / 1e9:.2f} GB) exceed "
+                f"{s.hw.alpha:.2f} * {s.hw.hbm_bytes / 1e9:.0f} GB")
+        req.state = WAITING
+        self.queue.append(req)
+
+    def _admit(self) -> None:
+        """FIFO admission at step boundaries: a slot must be free, at most
+        one request prefills at a time, and the serving memory model must
+        accept one more resident cache (Eq. 3, serving form)."""
+        while (self.queue and self.free_slots and self._prefilling is None
+               and self._admissible(self.occupancy() + 1)):
+            req = self.queue.popleft()
+            req.state = PREFILL
+            req.slot = self.free_slots.pop(0)
+            self._prefilling = req
+            self.admission_order.append(req.rid)
+        # occupancy peaks at admission and only falls at evictions, so
+        # measuring here (not at end-of-step, after same-step finishes
+        # retired) is what makes the reported peak honest
+        self.max_occupancy = max(self.max_occupancy, self.occupancy())
+        self.modeled_peak = max(self.modeled_peak, self.modeled_bytes())
+
+    # -- prefill interleave -------------------------------------------------
+
+    def _prefill_step(self, now: float) -> None:
+        req = self._prefilling
+        spans = chunk_spans(len(req.tokens), self.scfg.prefill_chunk)
+        start, stop = spans[req.chunks_done]
+        seg = jnp.asarray(req.tokens[None, start:stop], jnp.int32)
+        logits, req.cache = engine.prefill_chunk(
+            self.params, self.cfg, self.ctx, req.cache, seg,
+            self.scfg.cache_len)
+        req.chunks_done += 1
+        self.prefill_chunks += 1
+        if req.chunks_done == len(spans):
+            self._install(req, logits, now)
+
+    def _install(self, req: Request, logits, now: float) -> None:
+        """Join at a step boundary: copy the private prefill cache into the
+        reserved slot and sample the first token from the prefill logits."""
+        self.cache = jax.tree.map(
+            lambda full, one: full.at[req.slot].set(one),
+            self.cache, req.cache)
+        req.cache = None
+        req.state = ACTIVE
+        req.t_first = now
+        self.active[req.slot] = req
+        self._prefilling = None
+        self._append_token(req, np.asarray(logits[0, -1]), now)
+
+    # -- decode -------------------------------------------------------------
+
+    def _sample(self, req: Request, logits_v: np.ndarray) -> int:
+        if self.scfg.temperature > 0:
+            k = jax.random.fold_in(jax.random.fold_in(self.key, req.rid),
+                                   len(req.out))
+            return int(jax.random.categorical(
+                k, jnp.asarray(logits_v) / self.scfg.temperature))
+        return int(np.argmax(logits_v))
+
+    def _append_token(self, req: Request, logits_v: np.ndarray,
+                      now: float) -> None:
+        tok = self._sample(req, logits_v)
+        req.out.append(tok)
+        req.next_token = tok
+        if len(req.out) >= req.max_new_tokens:
+            self._evict(req, now)
+
+    def _evict(self, req: Request, now: float) -> None:
+        """Leave at a step boundary: release the slot (contents are dead
+        weight until the next install overwrites them)."""
+        req.state = FINISHED
+        req.t_done = now
+        self.active.pop(req.slot, None)
+        self.free_slots.append(req.slot)
+        self.finished.append(req)
+
+    def _decode_wave(self, now: float) -> None:
+        toks = np.zeros((self.scfg.max_slots, 1, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0, 0] = req.next_token
+        logits, self.cache = self._decode(self.params, self.cache,
+                                          jnp.asarray(toks))
+        logits = np.asarray(logits)       # (slots, 1, 1, V)
+        self.decode_waves += 1
+        for slot, req in list(self.active.items()):
+            self._append_token(req, logits[slot, 0, -1], now)
+
+    # -- main loop ----------------------------------------------------------
+
+    def step(self, now: float = 0.0) -> bool:
+        """One scheduler step: admit, run one prefill chunk, run one decode
+        wave.  Returns False when there was nothing to do."""
+        self._admit()
+        busy = False
+        if self._prefilling is not None:
+            self._prefill_step(now)
+            busy = True
+        if self.active:
+            self._decode_wave(now)
+            busy = True
+        self.steps += 1
+        return busy
+
+    def run(self, requests: list[Request]) -> dict:
+        """Drive a trace of requests (``arrival`` = seconds after start) to
+        completion against the wall clock; returns the metrics dict."""
+        pending = sorted(requests, key=lambda r: r.arrival)
+        t0 = time.perf_counter()
+        i = 0
+        while (i < len(pending) or self.queue or self.active
+               or self._prefilling is not None):
+            now = time.perf_counter() - t0
+            while i < len(pending) and pending[i].arrival <= now:
+                self.submit(pending[i])
+                i += 1
+            if not self.step(now) and i < len(pending):
+                time.sleep(min(pending[i].arrival - now, 0.01))
+        return self.metrics(time.perf_counter() - t0)
+
+    def metrics(self, elapsed: float) -> dict:
+        lat = [r.t_done - r.arrival for r in self.finished]
+        gen = sum(len(r.out) for r in self.finished)
+        return {
+            "requests": len(self.finished),
+            "generated_tokens": gen,
+            "elapsed_s": elapsed,
+            "tok_per_s": gen / elapsed if elapsed > 0 else 0.0,
+            "latency_p50_s": float(np.percentile(lat, 50)) if lat else 0.0,
+            "latency_p99_s": float(np.percentile(lat, 99)) if lat else 0.0,
+            "decode_waves": self.decode_waves,
+            "prefill_chunks": self.prefill_chunks,
+            "max_occupancy": self.max_occupancy,
+            "modeled_peak_bytes": self.modeled_peak,
+            "budget_bytes": self.scfg.hw.alpha * self.scfg.hw.hbm_bytes,
+        }

@@ -40,8 +40,11 @@ def test_train_cli_adaptive_mact():
 
 def test_serve_cli_smoke():
     out = _run(["repro.launch.serve", "--arch", "gemma3-27b", "--smoke",
-                "--batch", "2", "--prompt-len", "8", "--gen", "4"])
-    assert "generated" in out
+                "--requests", "3", "--arrival-rate", "8",
+                "--prompt-lens", "8,16", "--gen", "2,4",
+                "--prefill-chunk", "8"])
+    assert "tok/s" in out
+    assert "modeled peak" in out
 
 
 def test_dryrun_cli_tiny():

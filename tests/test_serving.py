@@ -1,0 +1,370 @@
+"""Serving-stack tests: single-pass prefill parity, chunked prefill,
+compiled-step caching, continuous-batching scheduler invariants, and the
+serving memory model (docs/DESIGN.md §Serving)."""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.base import (AttentionSpec, HardwareProfile, LayerSpec,
+                                ModelConfig)
+from repro.core import memory_model as mm
+from repro.core.chunking import chunk_spans
+from repro.core.moe import DistContext
+from repro.models import blocks, transformer
+from repro.serving import engine
+from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
+                                     ServeConfig)
+
+CTX = DistContext()
+
+PREFILL_ARCHS = [
+    ("llama3.2-3b", 24),            # full attention, linear cache
+    ("mixtral-8x7b", 24),           # windowed attention + MoE
+    ("mixtral-8x7b", 96),           # ring wrap: prompt > window (64)
+    ("gemma3-27b", 96),             # window + full mix, ring wrap
+    ("mamba2-130m", 24),            # SSM state + conv tail
+    ("jamba-1.5-large-398b", 24),   # hybrid mamba/attention
+    ("whisper-small", 24),          # enc-dec: cross-attention caches
+]
+
+
+def _setup(arch, S, seed=0, B=2, layers=None):
+    cfg = registry()[arch].reduced()
+    if layers:
+        cfg = dataclasses.replace(cfg, num_layers=layers)
+    params = transformer.init_params(jax.random.PRNGKey(seed), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(seed + 1), (B, S), 0,
+                              cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.encoder_layers:
+        batch["frames"] = jax.random.normal(
+            jax.random.PRNGKey(seed + 2), (B, cfg.encoder_seq, cfg.d_model))
+    return cfg, params, batch
+
+
+# ---------------------------------------------------------------------------
+# cache layout: bit-identical to the replay writes (unit level)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,window,S", [
+    ("full", 0, 24), ("window", 16, 12), ("window", 16, 40),
+    ("chunked", 16, 40)])
+def test_build_attn_cache_matches_replay_writes(kind, window, S):
+    """Given the same K/V, the single-pass layout equals the decode path's
+    token-by-token ring/linear writes bit for bit — wraps included."""
+    spec = LayerSpec(attn=AttentionSpec(kind=kind, window=window))
+    cache_len = max(S, 48)
+    Sc = blocks.cache_len(spec, cache_len)
+    B, KH, hd = 2, 2, 4
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, KH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, hd))
+    ref = {"k": jnp.zeros((B, Sc, KH, hd)), "v": jnp.zeros((B, Sc, KH, hd))}
+    ring = kind in ("window", "chunked") and window and Sc == window
+    for pos in range(S):
+        w = pos % Sc if ring else pos
+        ref = {"k": jax.lax.dynamic_update_slice_in_dim(
+                    ref["k"], k[:, pos:pos + 1], w, axis=1),
+               "v": jax.lax.dynamic_update_slice_in_dim(
+                    ref["v"], v[:, pos:pos + 1], w, axis=1)}
+    got = blocks.build_attn_cache(k, v, spec, cache_len, jnp.float32)
+    np.testing.assert_array_equal(np.asarray(got["k"]), np.asarray(ref["k"]))
+    np.testing.assert_array_equal(np.asarray(got["v"]), np.asarray(ref["v"]))
+
+
+@pytest.mark.parametrize("chunk", [4, 8])
+def test_write_attn_cache_matches_replay_writes(chunk):
+    """Chunked extension writes land exactly where decode writes land."""
+    spec = LayerSpec(attn=AttentionSpec(kind="window", window=16))
+    B, KH, hd, S = 1, 2, 4, 40
+    k = jax.random.normal(jax.random.PRNGKey(0), (B, S, KH, hd))
+    v = jax.random.normal(jax.random.PRNGKey(1), (B, S, KH, hd))
+    ref = blocks.build_attn_cache(k, v, spec, S, jnp.float32)
+    got = {"k": jnp.zeros_like(ref["k"]), "v": jnp.zeros_like(ref["v"])}
+    for start, stop in chunk_spans(S, chunk):
+        got = blocks.write_attn_cache(got, k[:, start:stop], v[:, start:stop],
+                                      start, spec)
+    np.testing.assert_array_equal(np.asarray(got["k"]), np.asarray(ref["k"]))
+    np.testing.assert_array_equal(np.asarray(got["v"]), np.asarray(ref["v"]))
+
+
+def test_slot_positions_ring_and_linear():
+    win = LayerSpec(attn=AttentionSpec(kind="window", window=4))
+    full = LayerSpec(attn=AttentionSpec(kind="full"))
+    np.testing.assert_array_equal(
+        np.asarray(blocks.slot_positions(win, 4, 6)), [4, 5, 2, 3])
+    np.testing.assert_array_equal(
+        np.asarray(blocks.slot_positions(win, 4, 0)), [-1, -1, -1, -1])
+    np.testing.assert_array_equal(
+        np.asarray(blocks.slot_positions(full, 4, 2)), [0, 1, -1, -1])
+
+
+# ---------------------------------------------------------------------------
+# single-pass prefill vs replay (full model)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,S", PREFILL_ARCHS,
+                         ids=[f"{a}-S{s}" for a, s in PREFILL_ARCHS])
+def test_prefill_matches_replay(arch, S):
+    """One forward pass produces the replay's cache: same structure, same
+    pos, bit-identical leaves wherever the layer inputs are bit-identical
+    (period 0 = layer stack entry 0), and <= 1e-5 everywhere else (deeper
+    layers' inputs differ only by replay's decode-attention vs forward's
+    blocked-attention rounding of the residual stream)."""
+    cfg, params, batch = _setup(arch, S)
+    cache_len = S + 8
+    lr, cr = engine.prefill_replay(params, cfg, CTX, batch, cache_len)
+    lp, cp = engine.prefill(params, cfg, CTX, batch, cache_len)
+    assert jax.tree.structure(cr) == jax.tree.structure(cp)
+    assert int(cp["pos"]) == int(cr["pos"]) == S
+    for a, b in zip(jax.tree.leaves(cr), jax.tree.leaves(cp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_first_layer_bit_identical():
+    """Layer 0 sees bit-identical inputs on both paths, so its K/V cache —
+    ring layout included — must match the replay bit for bit."""
+    cfg, params, batch = _setup("mixtral-8x7b", 96)   # window 64: wraps
+    _, cr = engine.prefill_replay(params, cfg, CTX, batch, 104)
+    _, cp = engine.prefill(params, cfg, CTX, batch, 104)
+    # reduced mixtral unrolls both layers into "rem"; index 0 = layer 0
+    for name in ("k", "v"):
+        np.testing.assert_array_equal(
+            np.asarray(cr["rem"][0]["attn"][name]),
+            np.asarray(cp["rem"][0]["attn"][name]))
+
+
+def test_prefill_logits_match_forward():
+    cfg, params, batch = _setup("mixtral-8x7b", 32)
+    logits, _ = transformer.forward(params, cfg, CTX, batch)
+    lp, _ = engine.prefill(params, cfg, CTX, batch, 40)
+    np.testing.assert_allclose(np.asarray(lp[:, 0]), np.asarray(logits[:, -1]),
+                               atol=1e-5)
+
+
+def test_prefill_prefix_layers():
+    """ModelConfig.prefix (unrolled leading layers + scanned body) caches
+    consistently on the single-pass path."""
+    base = registry()["deepseek-mini-8l"]
+    cfg = dataclasses.replace(
+        base.reduced(), prefix=base.reduced().pattern[:1], num_layers=5)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    toks = jax.random.randint(jax.random.PRNGKey(1), (2, 16), 0,
+                              cfg.vocab_size)
+    lr, cr = engine.prefill_replay(params, cfg, CTX, {"tokens": toks}, 24)
+    lp, cp = engine.prefill(params, cfg, CTX, {"tokens": toks}, 24)
+    assert jax.tree.structure(cr) == jax.tree.structure(cp)
+    for a, b in zip(jax.tree.leaves(cr), jax.tree.leaves(cp)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lr), np.asarray(lp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_prefill_rejects_overlong_prompt():
+    cfg, params, batch = _setup("llama3.2-3b", 24)
+    with pytest.raises(ValueError, match="exceeds"):
+        engine.prefill(params, cfg, CTX, batch, 16)
+
+
+# ---------------------------------------------------------------------------
+# chunked prefill (extend_step)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("arch,S,chunk", [
+    ("mixtral-8x7b", 96, 16),       # ring wraps mid-extension
+    ("gemma3-27b", 48, 8),
+    ("jamba-1.5-large-398b", 48, 16)])
+def test_chunked_prefill_matches_single_pass(arch, S, chunk):
+    cfg, params, batch = _setup(arch, S)
+    cache_len = S + 8
+    lf, cf = engine.prefill(params, cfg, CTX, batch, cache_len)
+    lc, cc = engine.prefill_chunked(params, cfg, CTX, batch["tokens"],
+                                    cache_len, chunk)
+    np.testing.assert_allclose(np.asarray(lf), np.asarray(lc), atol=2e-4)
+    for a, b in zip(jax.tree.leaves(cf), jax.tree.leaves(cc)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+    # and decode continues identically from either cache
+    nxt = jnp.full((2, 1), 7, jnp.int32)
+    l1, _ = transformer.decode_step(params, cfg, CTX, cf, nxt)
+    l2, _ = transformer.decode_step(params, cfg, CTX, cc, nxt)
+    np.testing.assert_allclose(np.asarray(l1), np.asarray(l2), atol=2e-4)
+
+
+def test_chunked_prefill_rejects_overlong_prompt():
+    """Chunk write positions are traced, so the extend path cannot detect a
+    linear-cache overflow itself — the host-side guard must."""
+    cfg, params, batch = _setup("llama3.2-3b", 24)
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        engine.prefill_chunked(params, cfg, CTX, batch["tokens"], 16, 8)
+
+
+def test_chunk_spans():
+    assert chunk_spans(10, 4) == [(0, 4), (4, 8), (8, 10)]
+    assert chunk_spans(8, 8) == [(0, 8)]
+    with pytest.raises(ValueError):
+        chunk_spans(8, 0)
+
+
+# ---------------------------------------------------------------------------
+# compiled-step caching + generate regression
+# ---------------------------------------------------------------------------
+
+def test_generate_temperature_without_key():
+    """Regression: temperature > 0 with key=None crashed on
+    jax.random.split(None); now defaults to a seeded key."""
+    cfg, params, batch = _setup("mamba2-130m", 8)
+    out = engine.generate(params, cfg, CTX, batch, steps=4, cache_len=16,
+                          temperature=0.8)
+    assert out.shape == (2, 4)
+    out2 = engine.generate(params, cfg, CTX, batch, steps=4, cache_len=16,
+                           temperature=0.8)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(out2))
+
+
+def test_compiled_steps_cached_across_calls():
+    """prefill/generate must reuse one compiled step per (cfg, ctx) instead
+    of re-wrapping jax.jit per invocation."""
+    cfg, params, batch = _setup("llama3.2-3b", 8)
+    engine.clear_step_cache()
+    assert engine.get_decode_step(cfg, CTX) is engine.get_decode_step(cfg, CTX)
+    engine.generate(params, cfg, CTX, batch, steps=2, cache_len=16)
+    n = engine.step_cache_info()["entries"]
+    engine.generate(params, cfg, CTX, batch, steps=2, cache_len=16)
+    engine.prefill(params, cfg, CTX, batch, 16)
+    assert engine.step_cache_info()["entries"] == n
+
+
+# ---------------------------------------------------------------------------
+# serving memory model
+# ---------------------------------------------------------------------------
+
+def test_decode_cache_bytes_window_bounded():
+    cfg = registry()["mixtral-8x7b"]                 # every layer window 4096
+    assert (mm.decode_cache_bytes(cfg, 32_768)
+            == mm.decode_cache_bytes(cfg, 4096))
+    assert (mm.decode_cache_bytes(cfg, 2048)
+            < mm.decode_cache_bytes(cfg, 4096))
+    full = registry()["llama3.2-3b"]                 # full attention: linear
+    assert mm.decode_cache_bytes(full, 32_768) > mm.decode_cache_bytes(full, 4096)
+
+
+def test_serving_peak_monotone_and_fits():
+    cfg = registry()["mixtral-8x7b"].reduced()
+    kw = dict(cache_len=128, decode_tokens=4, prefill_tokens=32)
+    b1 = mm.serving_peak_bytes(cfg, requests=1, **kw)
+    b2 = mm.serving_peak_bytes(cfg, requests=2, **kw)
+    assert b2 > b1 > mm.serve_weight_bytes(cfg)
+    hw = HardwareProfile("t", hbm_bytes=(b1 + b2) / 2, peak_flops=1,
+                         hbm_bw=1, ici_bw=1, alpha=1.0)
+    assert mm.serving_fits(cfg, hw, requests=1, **kw)
+    assert not mm.serving_fits(cfg, hw, requests=2, **kw)
+
+
+# ---------------------------------------------------------------------------
+# continuous-batching scheduler
+# ---------------------------------------------------------------------------
+
+def _mini_serving(max_slots=2, n_requests=5, hw=None, seed=0,
+                  prefill_chunk=8):
+    cfg = registry()["mixtral-8x7b"].reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(rid=i,
+                    tokens=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 8)))
+            for i in range(n_requests)]
+    kw = {} if hw is None else {"hw": hw}
+    scfg = ServeConfig(max_slots=max_slots, cache_len=32,
+                       prefill_chunk=prefill_chunk, **kw)
+    sched = ContinuousBatchingScheduler(params, cfg, CTX, scfg)
+    return sched, reqs
+
+
+def test_scheduler_join_evict_invariants():
+    sched, reqs = _mini_serving(max_slots=2, n_requests=5)
+    m = sched.run(reqs)
+    assert m["requests"] == 5
+    assert sched.max_occupancy <= 2
+    assert sched.admission_order == [0, 1, 2, 3, 4]       # FIFO
+    for r in sched.finished:
+        assert r.state == "finished"
+        assert len(r.out) == r.max_new_tokens
+        assert r.t_done is not None and r.t_done >= r.arrival
+    assert not sched.active and not sched.queue
+    assert sorted(sched.free_slots) == [0, 1]             # all slots released
+    assert m["modeled_peak_bytes"] <= m["budget_bytes"]
+
+
+def test_scheduler_admission_refusal_under_budget():
+    """A budget that fits one resident request but not two must cap
+    occupancy at 1 — requests queue and drain as slots free."""
+    cfg = registry()["mixtral-8x7b"].reduced()
+    kw = dict(cache_len=32, decode_tokens=2, prefill_tokens=8, dtype_bytes=2)
+    b1 = mm.serving_peak_bytes(cfg, requests=1, **kw)
+    b2 = mm.serving_peak_bytes(cfg, requests=2, **kw)
+    hw = HardwareProfile("t", hbm_bytes=(b1 + b2) / 2, peak_flops=1,
+                         hbm_bw=1, ici_bw=1, alpha=1.0)
+    sched, reqs = _mini_serving(max_slots=2, n_requests=4, hw=hw)
+    m = sched.run(reqs)
+    assert m["requests"] == 4                              # all still served
+    assert sched.max_occupancy == 1                        # admission capped
+    assert m["modeled_peak_bytes"] <= m["budget_bytes"]
+
+
+def test_scheduler_rejects_never_admissible_request():
+    cfg = registry()["mixtral-8x7b"].reduced()
+    tiny = HardwareProfile("t", hbm_bytes=1e3, peak_flops=1, hbm_bw=1,
+                           ici_bw=1, alpha=1.0)
+    sched, reqs = _mini_serving(hw=tiny)
+    with pytest.raises(ValueError, match="never be admitted"):
+        sched.submit(reqs[0])
+    with pytest.raises(ValueError, match="exceeds cache_len"):
+        sched.submit(Request(rid=9, tokens=np.zeros(30, np.int32),
+                             max_new_tokens=10))
+
+
+def test_scheduler_greedy_matches_generate():
+    """Every request through the slot map — joins mid-flight, slot reuse
+    after eviction included — reproduces its solo engine.generate output
+    token for token."""
+    sched, reqs = _mini_serving(max_slots=2, n_requests=4, prefill_chunk=16)
+    sched.run(reqs)
+    for req in reqs:
+        out = engine.generate(sched.params, sched.cfg, CTX,
+                              {"tokens": jnp.asarray(req.tokens)[None]},
+                              steps=req.max_new_tokens, cache_len=32)
+        assert req.out == out[0].tolist()
+
+
+def test_scheduler_chunked_prefill_interleaves():
+    """Prompts longer than one chunk take multiple scheduler steps and
+    still serve correctly."""
+    sched, _ = _mini_serving(prefill_chunk=4)
+    req = Request(rid=0, tokens=np.arange(16, dtype=np.int32) % 100,
+                  max_new_tokens=3)
+    m = sched.run([req])
+    assert m["prefill_chunks"] == 4                        # 16 tokens / 4
+    assert len(req.out) == 3
+
+
+def test_scheduler_peak_counts_same_step_finishers():
+    """Occupancy is measured at admission, so a request that installs and
+    finishes within one step still registers in the reported peak."""
+    sched, _ = _mini_serving(prefill_chunk=16)
+    req = Request(rid=0, tokens=np.zeros(8, np.int32), max_new_tokens=1)
+    sched.run([req])
+    assert sched.max_occupancy == 1
+    assert sched.modeled_peak >= sched.modeled_bytes(requests=1)
+
+
+def test_scheduler_rejects_encoder_archs():
+    cfg = registry()["whisper-small"].reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    with pytest.raises(ValueError, match="encoder"):
+        ContinuousBatchingScheduler(params, cfg, CTX, ServeConfig())
