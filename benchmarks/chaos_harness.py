@@ -1,0 +1,200 @@
+"""Chaos benchmark: score the resilience runtime under injected faults.
+
+Three scenarios (docs/DESIGN.md §Resilience), all on reduced configs so the
+CPU container runs them end to end:
+
+* **training** — two runs with identical chaos (a routing-load burst one
+  step before an injected RESOURCE_EXHAUSTED at a skewed step): run A is
+  never killed; run B additionally gets its newest checkpoint truncated and
+  a hard crash, then auto-resumes from the newest *valid* checkpoint.  Both
+  must complete with bounded ladder retries, and run B's final TrainState
+  must equal run A's **bit for bit** — the kill-and-resume parity the
+  self-healing checkpoint path promises.
+* **serving/faulted** — the same request trace with and without an injected
+  decode-wave OOM.  The faulted run must finish every accepted request
+  (requeue-on-eviction; zero accepted-request loss) with greedy outputs
+  identical to the unfaulted run, degrading only in latency.
+* **serving/overload** — a tight admission deadline plus a WAITING-queue
+  bound: excess requests are shed with a client-visible retry-after while
+  the survivors' latency stays bounded — shedding, not crashing.
+
+Emits CSV lines per repo convention and writes ``BENCH_chaos.json``
+(skipped in tiny/CI mode: CHAOS_BENCH_TINY=1), which feeds the README
+fault-tolerance row via scripts/gen_results_table.py.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import tempfile
+
+TRAIN_ARCH = "deepseek-mini-8l"
+SERVE_ARCH = "mixtral-8x7b"
+TRAIN_STEPS = 8
+TINY_TRAIN_STEPS = 5
+SERVE_REQUESTS = 12
+TINY_SERVE_REQUESTS = 5
+
+
+def _bit_identical(a, b) -> bool:
+    import jax
+    import numpy as np
+
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+def _train_scenario(steps: int, chaos: str, truncate_at: int,
+                    crash_at: int) -> dict:
+    """Fault placement must respect one ordering constraint for the
+    bit-parity check to be meaningful: a checksum-valid checkpoint has to
+    postdate every schedule-affecting fault (burst/oom), because the
+    resumed run replays the tail without the injector.  The truncated save
+    then tears a *later* checkpoint, forcing resume back to that one."""
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.moe import DistContext
+    from repro.runtime.faults import FaultInjector, SimulatedCrash
+    from repro.training.trainer import Trainer
+
+    cfg = get_config(TRAIN_ARCH).reduced()
+    kw = dict(seq_len=32, global_batch=2,
+              lr=1e-3, adaptive_mact=True, replan_interval=2,
+              checkpoint_every=2)
+    dirs = [tempfile.mkdtemp(prefix="chaos_") for _ in range(2)]
+    try:
+        # run A: chaos but no kill — the uninterrupted reference
+        tr_a = Trainer(cfg, DistContext(), checkpoint_dir=dirs[0],
+                       injector=FaultInjector.from_string(chaos), **kw)
+        state_a = tr_a.fit(steps)
+        # run B: same chaos + a truncated checkpoint + a crash, then resume
+        inj_b = FaultInjector.from_string(
+            f"{chaos},ckpt_truncate@{truncate_at},crash@{crash_at}")
+        tr_b = Trainer(cfg, DistContext(), checkpoint_dir=dirs[1],
+                       injector=inj_b, **kw)
+        crashed = False
+        try:
+            tr_b.fit(steps)
+        except SimulatedCrash:
+            crashed = True
+        tr_b2 = Trainer(cfg, DistContext(), checkpoint_dir=dirs[1],
+                        resume=True, **kw)
+        state_b = tr_b2.fit(steps)
+        retries = [r["oom_retries"] for r in tr_a.log]
+        return {
+            "steps": steps,
+            "escalations": len(tr_a.guard.escalations),
+            "max_step_retries": max(retries),
+            "retries_bounded": max(retries) <= tr_a.max_oom_retries,
+            "headroom_widened": bool(tr_a.headroom_widenings),
+            "crashed": crashed,
+            "truncated_skipped": tr_b2.resumed_from is not None
+            and tr_b2.resumed_from < crash_at,
+            "resumed_from": tr_b2.resumed_from,
+            "completed": int(np.asarray(state_b.step)) == steps,
+            "bit_identical": _bit_identical(state_a, state_b),
+        }
+    finally:
+        for d in dirs:
+            shutil.rmtree(d, ignore_errors=True)
+
+
+def _serve_trace(n: int, vocab: int):
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    rng = np.random.default_rng(0)
+    return [Request(rid=i,
+                    tokens=rng.integers(0, vocab, 16).astype(np.int32),
+                    max_new_tokens=6, arrival=0.0)
+            for i in range(n)]
+
+
+def _serve_scenario(n_requests: int) -> dict:
+    import jax
+    from repro.configs import get_config
+    from repro.core.moe import DistContext
+    from repro.models import transformer
+    from repro.runtime.faults import FaultInjector
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+
+    cfg = get_config(SERVE_ARCH).reduced()
+    ctx = DistContext()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    scfg = ServeConfig(max_slots=2, cache_len=32, prefill_chunk=8)
+
+    base = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+    m_base = base.run(_serve_trace(n_requests, cfg.vocab_size))
+    ref = {r.rid: list(r.out) for r in base.finished}
+
+    faulted = ContinuousBatchingScheduler(
+        params, cfg, ctx, scfg,
+        injector=FaultInjector.from_string("oom@4,oom@9"))
+    m_fault = faulted.run(_serve_trace(n_requests, cfg.vocab_size))
+    got = {r.rid: list(r.out) for r in faulted.finished}
+    accepted = set(faulted.admission_order)
+    finished = {r.rid for r in faulted.finished}
+
+    over = ContinuousBatchingScheduler(
+        params, cfg, ctx,
+        ServeConfig(max_slots=1, cache_len=32, prefill_chunk=8,
+                    deadline_s=3.0, max_waiting=6))
+    m_over = over.run(_serve_trace(n_requests, cfg.vocab_size))
+
+    return {
+        "requests": n_requests,
+        "baseline": {"tok_s": round(m_base["tok_per_s"], 1),
+                     "p99_s": round(m_base["latency_p99_s"], 3)},
+        "faulted": {"tok_s": round(m_fault["tok_per_s"], 1),
+                    "p99_s": round(m_fault["latency_p99_s"], 3),
+                    "faults": m_fault["faults"],
+                    "requeues": m_fault["requeues"],
+                    "accepted_lost": len(accepted - finished),
+                    "outputs_match_baseline": got == ref},
+        "overload": {"finished": m_over["requests"],
+                     "shed": m_over["shed"],
+                     "retry_after_p50_s": round(m_over["retry_after_p50_s"], 2),
+                     "p99_s": round(m_over["latency_p99_s"], 3)},
+    }
+
+
+def run() -> list[str]:
+    tiny = bool(os.environ.get("CHAOS_BENCH_TINY"))
+    if tiny:
+        # faults before the first save so the surviving state-2 checkpoint
+        # postdates them; the state-4 save is the one torn
+        train = _train_scenario(TINY_TRAIN_STEPS, "burst@0x2.0,oom@1",
+                                truncate_at=3, crash_at=4)
+    else:
+        # faults at steps 2-3, captured by the state-4 save; the state-6
+        # save is torn, the crash kills step 6
+        train = _train_scenario(TRAIN_STEPS, "burst@2x2.0,oom@3",
+                                truncate_at=5, crash_at=6)
+    serve = _serve_scenario(TINY_SERVE_REQUESTS if tiny else SERVE_REQUESTS)
+    lines = [
+        f"chaos,training,escalations={train['escalations']},"
+        f"retries_bounded={train['retries_bounded']},"
+        f"truncated_skipped={train['truncated_skipped']},"
+        f"bit_identical={train['bit_identical']}",
+        f"chaos,serving_faulted,faults={serve['faulted']['faults']},"
+        f"requeues={serve['faulted']['requeues']},"
+        f"accepted_lost={serve['faulted']['accepted_lost']},"
+        f"outputs_match={serve['faulted']['outputs_match_baseline']}",
+        f"chaos,serving_overload,shed={serve['overload']['shed']},"
+        f"finished={serve['overload']['finished']},"
+        f"retry_after_p50_s={serve['overload']['retry_after_p50_s']}",
+    ]
+    if not tiny:
+        with open("BENCH_chaos.json", "w") as f:
+            json.dump({"train_arch": TRAIN_ARCH, "serve_arch": SERVE_ARCH,
+                       "training": train, "serving": serve}, f, indent=2)
+        lines.append("chaos,written=BENCH_chaos.json")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

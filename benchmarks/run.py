@@ -11,7 +11,7 @@ import sys
 import time
 
 from benchmarks import (ablation_capacity, adaptive_microbench,
-                        compiled_memory, dispatch_microbench,
+                        chaos_harness, compiled_memory, dispatch_microbench,
                         fig2_distribution, fig4_throughput, fig5_mact,
                         pipeline_microbench, roofline, serving_microbench,
                         table4_memory)
@@ -21,6 +21,7 @@ SUITES = {
     "pipeline": pipeline_microbench.run,  # sequential vs pipelined FCDA
     "adaptive": adaptive_microbench.run,  # per-layer MACT vs static global
     "serving": serving_microbench.run,    # continuous vs static batching
+    "chaos": chaos_harness.run,           # injected faults: ladder/resume/shed
     "table4": table4_memory.run,       # Table 4 (memory model, Methods 1/2/3)
     "fig2": fig2_distribution.run,     # Fig. 2 (token distribution)
     "fig4": fig4_throughput.run,       # Fig. 4 (TGS Methods 1/2/3)

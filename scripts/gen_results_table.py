@@ -93,6 +93,37 @@ def serving_table() -> list[str]:
     return out
 
 
+def chaos_table() -> list[str]:
+    d = _load("BENCH_chaos.json")
+    if not d:
+        return ["(BENCH_chaos.json missing — run `benchmarks.run chaos`)"]
+    t, s = d["training"], d["serving"]
+    f, o = s["faulted"], s["overload"]
+    ok = (t["retries_bounded"] and t["bit_identical"]
+          and f["accepted_lost"] == 0 and f["outputs_match_baseline"])
+    out = ["| scenario | outcome |",
+           "|---|---|",
+           f"| training: burst + injected OOM ({d['train_arch']}) "
+           f"| completed, {t['escalations']} ladder escalation(s), "
+           f"max {t['max_step_retries']} retries/step, headroom "
+           f"{'widened' if t['headroom_widened'] else 'unchanged'} |",
+           f"| training: crash + truncated checkpoint "
+           f"| auto-resumed from step {t['resumed_from']} (corrupt save "
+           f"skipped), final state bit-identical: "
+           f"**{t['bit_identical']}** |",
+           f"| serving: {f['faults']} faulted decode waves "
+           f"({d['serve_arch']}) | {f['requeues']} requeues, "
+           f"**{f['accepted_lost']} accepted requests lost**, outputs match "
+           f"unfaulted run: {f['outputs_match_baseline']}; p99 "
+           f"{s['baseline']['p99_s']:.2f}s -> {f['p99_s']:.2f}s |",
+           f"| serving: overload (1 slot, deadline) | {o['finished']} served, "
+           f"{o['shed']} shed with retry-after p50 "
+           f"{o['retry_after_p50_s']:.0f}s — shed, not crashed |",
+           "",
+           f"All resilience invariants hold: {ok}."]
+    return out
+
+
 def main() -> None:
     print("### Dispatch planning (single-sort vs two-sort, CPU)\n")
     print("\n".join(dispatch_table()))
@@ -102,6 +133,8 @@ def main() -> None:
     print("\n".join(adaptive_table()))
     print("\n### Continuous-batching serving (mixed-length trace, CPU)\n")
     print("\n".join(serving_table()))
+    print("\n### Fault tolerance (chaos harness, injected faults)\n")
+    print("\n".join(chaos_table()))
 
 
 if __name__ == "__main__":

@@ -1,1 +1,2 @@
-from repro.checkpointing.io import latest_step, restore, save
+from repro.checkpointing.io import (latest_step, load_extra, restore, save,
+                                    valid_steps, verify)

@@ -1,12 +1,28 @@
-"""Pytree checkpointing: npz for arrays + a json manifest for the structure.
+"""Crash-consistent pytree checkpointing: npz payload + json manifest.
 
 Arrays are gathered to host (fine at the scales this container trains; a
 real multi-host deployment would swap in per-shard writes behind the same
 save/restore API).
+
+Crash consistency (docs/DESIGN.md §Resilience): a checkpoint is *committed*
+by its manifest.  ``save`` writes the npz payload to a temp file, fsyncs,
+``os.replace``s it into place, then writes the manifest — carrying the
+payload's sha256, the leaf count and the treedef string — the same way.
+Readers (``latest_step``/``valid_steps``) only trust steps whose manifest
+exists AND whose payload hashes to the recorded checksum, so a write torn
+by a crash (or by the fault injector's ``ckpt_truncate``) is skipped, never
+returned.  ``restore`` additionally validates the manifest structure
+against the caller's ``like_tree`` — a stale tree fails loudly instead of
+silently unflattening into the wrong pytree.
+
+The manifest's ``extra`` dict carries small host-side runtime state the
+self-healing resume needs warm — the telemetry EMA and the MACT hysteresis
+vector (training/trainer.py) — as plain JSON.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import re
@@ -20,32 +36,134 @@ def _flatten(tree):
     return leaves, treedef
 
 
-def save(path: str, step: int, tree) -> str:
+def _base(path: str, step: int) -> str:
+    return os.path.join(path, f"step_{step:08d}")
+
+
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
+
+
+def _replace_into(tmp: str, dst: str) -> None:
+    with open(tmp, "rb") as f:
+        os.fsync(f.fileno())
+    os.replace(tmp, dst)
+
+
+def save(path: str, step: int, tree, extra: dict | None = None) -> str:
+    """Write a committed checkpoint; returns the payload path.
+
+    ``extra`` is a small JSON-serializable dict stored in the manifest
+    (numpy arrays are converted; restore hands it back via ``load_extra``).
+    """
     os.makedirs(path, exist_ok=True)
     leaves, treedef = _flatten(tree)
-    out = os.path.join(path, f"step_{step:08d}")
-    np.savez(out + ".npz", **{f"leaf_{i}": np.asarray(l)
-                              for i, l in enumerate(leaves)})
-    with open(out + ".json", "w") as f:
-        json.dump({"step": step, "treedef": str(treedef),
-                   "n_leaves": len(leaves)}, f)
+    out = _base(path, step)
+    tmp = out + ".npz.tmp"
+    np.savez(tmp, **{f"leaf_{i}": np.asarray(l) for i, l in enumerate(leaves)})
+    if os.path.exists(tmp + ".npz"):     # np.savez appends .npz to bare names
+        tmp += ".npz"
+    checksum = _sha256(tmp)
+    _replace_into(tmp, out + ".npz")
+    manifest = {"step": step, "treedef": str(treedef),
+                "n_leaves": len(leaves), "sha256": checksum,
+                "extra": _jsonable(extra or {})}
+    with open(out + ".json.tmp", "w") as f:
+        json.dump(manifest, f)
+    _replace_into(out + ".json.tmp", out + ".json")
     return out + ".npz"
 
 
-def latest_step(path: str) -> int | None:
-    if not os.path.isdir(path):
+def _jsonable(obj):
+    if isinstance(obj, dict):
+        return {k: _jsonable(v) for k, v in obj.items()}
+    if isinstance(obj, (list, tuple)):
+        return [_jsonable(v) for v in obj]
+    if isinstance(obj, np.ndarray):
+        return obj.tolist()
+    if isinstance(obj, (np.integer, np.floating)):
+        return obj.item()
+    return obj
+
+
+def _manifest(path: str, step: int) -> dict | None:
+    try:
+        with open(_base(path, step) + ".json") as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError):
         return None
-    steps = [int(m.group(1)) for f in os.listdir(path)
-             if (m := re.match(r"step_(\d+)\.npz", f))]
-    return max(steps) if steps else None
+
+
+def verify(path: str, step: int) -> tuple[bool, str]:
+    """Is checkpoint ``step`` committed and intact?  (ok, reason)."""
+    man = _manifest(path, step)
+    if man is None:
+        return False, "manifest missing or unreadable"
+    payload = _base(path, step) + ".npz"
+    if not os.path.exists(payload):
+        return False, "payload missing"
+    if "sha256" in man:
+        if _sha256(payload) != man["sha256"]:
+            return False, "payload checksum mismatch (torn write?)"
+    else:                                 # legacy manifest: loadability only
+        try:
+            with np.load(payload) as data:
+                if len(data.files) != man.get("n_leaves", len(data.files)):
+                    return False, "legacy payload leaf count mismatch"
+        except Exception:                 # noqa: BLE001 — any decode failure
+            return False, "legacy payload unreadable"
+    return True, "ok"
+
+
+def valid_steps(path: str) -> list[int]:
+    """All committed-and-intact checkpoint steps, ascending."""
+    if not os.path.isdir(path):
+        return []
+    steps = {int(m.group(1)) for f in os.listdir(path)
+             if (m := re.match(r"step_(\d+)\.(?:npz|json)$", f))}
+    return [s for s in sorted(steps) if verify(path, s)[0]]
+
+
+def latest_step(path: str) -> int | None:
+    """Newest *valid* checkpoint step — partial/corrupt saves are skipped,
+    so a resume after a torn write replays from the last good one."""
+    steps = valid_steps(path)
+    return steps[-1] if steps else None
 
 
 def restore(path: str, step: int, like_tree):
-    """Restore into the structure of ``like_tree`` (shape/dtype preserved)."""
-    data = np.load(os.path.join(path, f"step_{step:08d}.npz"))
+    """Restore into the structure of ``like_tree`` (shape/dtype preserved).
+
+    The saved manifest's structure (leaf count, treedef string) must match
+    ``like_tree`` — catching the stale-tree case where leaf shapes happen
+    to line up but the pytree they unflatten into is wrong.
+    """
     leaves, treedef = _flatten(like_tree)
+    man = _manifest(path, step)
+    if man is not None:
+        if man.get("n_leaves", len(leaves)) != len(leaves):
+            raise ValueError(
+                f"checkpoint step {step} holds {man['n_leaves']} leaves but "
+                f"like_tree has {len(leaves)} — restoring into a different "
+                f"structure than was saved")
+        saved_def = man.get("treedef")
+        if saved_def is not None and saved_def != str(treedef):
+            raise ValueError(
+                f"checkpoint step {step} treedef does not match like_tree:\n"
+                f"  saved:    {saved_def}\n  like_tree: {treedef}")
+    data = np.load(_base(path, step) + ".npz")
     new_leaves = [data[f"leaf_{i}"] for i in range(len(leaves))]
     for old, new in zip(leaves, new_leaves):
         if tuple(old.shape) != tuple(new.shape):
             raise ValueError(f"shape mismatch {old.shape} vs {new.shape}")
     return jax.tree_util.tree_unflatten(treedef, new_leaves)
+
+
+def load_extra(path: str, step: int) -> dict:
+    """The manifest's ``extra`` dict ({} for legacy checkpoints)."""
+    man = _manifest(path, step)
+    return (man or {}).get("extra", {})

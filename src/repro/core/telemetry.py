@@ -57,3 +57,21 @@ class LoadTelemetry:
     def reset(self) -> None:
         self._ema = None
         self.steps = 0
+
+    # -- checkpoint round-trip (docs/DESIGN.md §Resilience) -------------------
+    # A resumed run replans from the warm EMA instead of cold-starting the
+    # worst-case safety schedule; the dict is small JSON the checkpoint
+    # manifest carries verbatim.
+    def state_dict(self) -> dict:
+        return {"steps": self.steps,
+                "ema": None if self._ema is None else self._ema.tolist()}
+
+    def load_state_dict(self, state: dict) -> None:
+        self.steps = int(state.get("steps", 0))
+        ema = state.get("ema")
+        self._ema = None if ema is None else np.asarray(ema, dtype=np.float64)
+        if self._ema is not None and self._ema.shape != (self.num_layers,
+                                                         self.num_experts):
+            raise ValueError(
+                f"restored telemetry EMA of shape {self._ema.shape}, expected "
+                f"({self.num_layers}, {self.num_experts})")

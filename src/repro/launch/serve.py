@@ -59,6 +59,15 @@ def main() -> None:
     ap.add_argument("--budget-gb", type=float, default=0.0,
                     help="override the hardware memory budget (GB)")
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--deadline-s", type=float, default=None,
+                    help="admission deadline: a request not admitted within "
+                         "this many seconds of arrival is shed with a "
+                         "retry-after quote (docs/DESIGN.md §Resilience)")
+    ap.add_argument("--max-waiting", type=int, default=0,
+                    help="overload bound on the WAITING queue (0 = off)")
+    ap.add_argument("--inject", default=None,
+                    help="chaos faults on scheduler steps, e.g. 'oom@20' "
+                         "(faulted decode waves requeue accepted requests)")
     ap.add_argument("--seed", type=int, default=0)
     args = ap.parse_args()
 
@@ -94,10 +103,17 @@ def main() -> None:
                                  alpha=1.0)
     scfg = ServeConfig(max_slots=args.max_slots, cache_len=cache_len,
                        prefill_chunk=args.prefill_chunk, hw=hw,
-                       temperature=args.temperature)
+                       temperature=args.temperature,
+                       deadline_s=args.deadline_s,
+                       max_waiting=args.max_waiting)
 
+    injector = None
+    if args.inject:
+        from repro.runtime.faults import FaultInjector
+        injector = FaultInjector.from_string(args.inject)
     sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg,
-                                        key=jax.random.PRNGKey(args.seed))
+                                        key=jax.random.PRNGKey(args.seed),
+                                        injector=injector)
     print(f"serving {cfg.name}: {args.requests} requests, "
           f"rate={args.arrival_rate}/s, slots={args.max_slots}, "
           f"cache_len={cache_len}, prefill_chunk={args.prefill_chunk}")
@@ -114,8 +130,14 @@ def main() -> None:
           f"max occupancy {m['max_occupancy']}/{args.max_slots} slots")
     print(f"schedule: {m['decode_waves']} decode waves, "
           f"{m['prefill_chunks']} interleaved prefill chunks")
-    sample = sched.finished[0]
-    print(f"sample (rid {sample.rid}): {sample.out[:12]}")
+    if m["shed"] or m["faults"]:
+        print(f"resilience: {m['shed']} shed "
+              f"(retry-after p50 {m['retry_after_p50_s']:.1f}s), "
+              f"{m['faults']} faulted waves, {m['requeues']} requeues, "
+              f"0 accepted requests lost")
+    if sched.finished:
+        sample = sched.finished[0]
+        print(f"sample (rid {sample.rid}): {sample.out[:12]}")
 
 
 if __name__ == "__main__":

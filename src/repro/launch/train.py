@@ -50,12 +50,23 @@ def main() -> None:
     ap.add_argument("--use-pallas", action="store_true")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
+    ap.add_argument("--resume", action="store_true",
+                    help="self-healing restart: restore the newest VALID "
+                         "checkpoint in --checkpoint-dir (corrupt saves are "
+                         "skipped) and train until --steps total steps")
+    ap.add_argument("--max-oom-retries", type=int, default=4,
+                    help="degradation-ladder bound per step (docs/DESIGN.md "
+                         "§Resilience)")
+    ap.add_argument("--inject", default=None,
+                    help="chaos faults, e.g. 'oom@3,burst@2x1.5,"
+                         "ckpt_truncate@4' (kind@step[xMAG][*TIMES])")
     ap.add_argument("--log-json", default=None)
     args = ap.parse_args()
 
     import jax
     from repro.configs import get_config
     from repro.core.moe import DistContext
+    from repro.runtime.faults import FaultInjector
     from repro.training.trainer import Trainer
 
     cfg = get_config(args.arch)
@@ -81,11 +92,25 @@ def main() -> None:
                       mact_hysteresis=args.mact_hysteresis,
                       mact_headroom=args.mact_headroom,
                       checkpoint_dir=args.checkpoint_dir,
-                      checkpoint_every=args.checkpoint_every)
+                      checkpoint_every=args.checkpoint_every,
+                      resume=args.resume,
+                      max_oom_retries=args.max_oom_retries,
+                      injector=(FaultInjector.from_string(args.inject)
+                                if args.inject else None))
     state = trainer.fit(args.steps, verbose=True)
-    print(f"final loss {trainer.log[-1]['loss']:.4f} after {args.steps} steps; "
-          f"chunk trace tail {trainer.chunk_trace[-8:]}; "
-          f"pipeline trace tail {trainer.pipeline_trace[-8:]}")
+    if trainer.resumed_from is not None:
+        print(f"resumed from checkpoint step {trainer.resumed_from}")
+    if trainer.guard.escalations:
+        print(f"OOM ladder: {len(trainer.guard.escalations)} escalation(s), "
+              f"headroom now {trainer.mact_headroom:.2f}")
+    if trainer.log:
+        print(f"final loss {trainer.log[-1]['loss']:.4f} at step "
+              f"{int(state.step)}; "
+              f"chunk trace tail {trainer.chunk_trace[-8:]}; "
+              f"pipeline trace tail {trainer.pipeline_trace[-8:]}")
+    else:
+        print(f"nothing to do: checkpoint already at step {int(state.step)} "
+              f">= target {args.steps}")
     if args.adaptive_mact and trainer.schedule_trace:
         last = trainer.schedule_trace[-1]
         print(f"adaptive layer schedules (last plan): "

@@ -1,0 +1,3 @@
+from repro.runtime.faults import (FaultInjector, FaultSpec, SimulatedCrash,
+                                  SimulatedOOM, parse_spec)
+from repro.runtime.guard import (DegradationLadder, OOMGuard, is_oom_error)

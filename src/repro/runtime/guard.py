@@ -1,0 +1,166 @@
+"""OOM degradation ladder + serving overload guard.
+
+MemFine's memory model *plans* a schedule that should fit; this module is
+what happens when the plan is wrong anyway (docs/DESIGN.md §Resilience).
+
+Training — ``OOMGuard`` wraps the trainer's compiled-step execution.  An
+out-of-memory failure (a real ``XlaRuntimeError: RESOURCE_EXHAUSTED`` or an
+injected ``SimulatedOOM``) does not kill the run; the guard rolls back to
+the pre-step ``TrainState`` (the step is functional, so the input state is
+the rollback point) and retries down a **degradation ladder** of strictly
+more memory-conservative schedules drawn from
+``MACTController.schedule_space``:
+
+    incumbent (bin, depth)
+      -> same bin, depth 1        (drop the pipeline's extra live chunk)
+      -> each larger bin, depth 1 (deeper FCDA chunking, Eq. 9)
+      -> largest bin, depth 1, remat_policy="full"  (full recompute: the
+         most memory-lean schedule the codebase can express)
+
+Retries are bounded by ``max_retries``; exhausting the ladder re-raises so
+a truly impossible step fails loudly instead of looping.  Every escalation
+is recorded, and the trainer layers a post-hoc memory-model audit on top
+(modeled-vs-HLO-derived bytes, headroom widening) via the ``on_oom``
+callback.
+
+Serving — ``ServingGuard`` holds the scheduler-side policy knobs: the
+per-request deadline, the WAITING-queue overload bound, and the
+retry-after estimate quoted to shed clients.  Accepted requests (PREFILL/
+ACTIVE) are never shed — shedding applies only to requests still waiting
+for admission; a faulted decode wave requeues its accepted requests
+instead (serving/scheduler.py).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable, Optional
+
+from repro.core.chunking import ScheduleSpec
+from repro.runtime.faults import SimulatedOOM
+
+# the ladder's final rung: trainer compiles this key with
+# remat_policy="full" on top of the largest chunk bin
+FULL_REMAT = "full-remat"
+
+
+def is_oom_error(exc: BaseException) -> bool:
+    """Is ``exc`` an out-of-memory failure the ladder should absorb?
+
+    Matches the injected ``SimulatedOOM`` (a MemoryError) and the messages
+    jaxlib's ``XlaRuntimeError`` carries for allocator exhaustion — the
+    exception class itself is version-dependent, so classify by content.
+    """
+    if isinstance(exc, (SimulatedOOM, MemoryError)):
+        return True
+    msg = str(exc)
+    return ("RESOURCE_EXHAUSTED" in msg or "Out of memory" in msg
+            or "out of memory" in msg)
+
+
+def _conservatism(key: tuple) -> tuple:
+    """(chunks, depth) summary of a schedule key, for ladder ordering: the
+    *least* chunked / deepest component of a per-layer vector is what OOMs."""
+    if key and key[0] == FULL_REMAT:
+        return (key[1], 1)
+    if key and isinstance(key[0], tuple):                  # per-layer vector
+        specs = [ScheduleSpec(*s) for s in key]
+        return (min(s.chunks for s in specs), max(s.depth for s in specs))
+    return (int(key[0]), int(key[1]))
+
+
+@dataclass
+class DegradationLadder:
+    """Rungs strictly more memory-conservative than an incumbent key.
+
+    ``space`` is ``MACTController.schedule_space(max_depth)`` — the same
+    bucketed emission set that bounds the trainer's compiled-step cache, so
+    escalation can never mint a schedule the cache key space doesn't know.
+    """
+    space: tuple
+
+    def rungs_after(self, key: tuple) -> list[tuple]:
+        if key and key[0] == FULL_REMAT:
+            return []                                      # already at the floor
+        bins = sorted({ScheduleSpec(*s).chunks for s in self.space})
+        c, d = _conservatism(key)
+        rungs: list[tuple] = []
+        if d > 1:
+            rungs.append((c, 1))
+        rungs += [(b, 1) for b in bins if b > c]
+        rungs.append((FULL_REMAT, bins[-1]))
+        return rungs
+
+
+@dataclass
+class OOMGuard:
+    """Execute-with-ladder wrapper for the trainer's compiled step."""
+    ladder: DegradationLadder
+    max_retries: int = 4
+    on_oom: Optional[Callable] = None     # (key, exc, step) -> audit dict
+    escalations: list = field(default_factory=list)
+    audits: list = field(default_factory=list)
+
+    def run(self, key: tuple, attempt: Callable, step: int):
+        """``attempt(key) -> result`` under the ladder.
+
+        Returns ``(result, key_used)``.  Non-OOM exceptions (including
+        ``SimulatedCrash``) propagate untouched — they are the resume
+        path's job, not the ladder's.
+        """
+        rungs = [key] + self.ladder.rungs_after(key)
+        last: Optional[BaseException] = None
+        for retries, k in enumerate(rungs):
+            if retries > self.max_retries:
+                break
+            try:
+                return attempt(k), k
+            except Exception as exc:                  # noqa: BLE001 — classified below
+                if not is_oom_error(exc):
+                    raise
+                last = exc
+                nxt = rungs[retries + 1] if retries + 1 < len(rungs) else None
+                self.escalations.append(
+                    {"step": step, "failed": k, "next": nxt,
+                     "retries": retries + 1, "error": str(exc)})
+                if self.on_oom is not None:
+                    audit = self.on_oom(k, exc, step)
+                    if audit:
+                        self.audits.append(audit)
+        raise RuntimeError(
+            f"OOM ladder exhausted at step {step}: "
+            f"{min(len(rungs), self.max_retries + 1)} schedules failed, "
+            f"last {self.escalations[-1]['failed']!r}") from last
+
+
+@dataclass
+class ServingGuard:
+    """Scheduler-side overload policy (docs/DESIGN.md §Resilience).
+
+    * ``deadline_s`` — default admission deadline: a WAITING request not
+      admitted within this many seconds of arrival is shed with a
+      client-visible ``retry_after``.  Per-request deadlines override it.
+    * ``max_waiting`` — overload bound on the WAITING queue; arrivals
+      beyond it are shed immediately (0 = unbounded).
+    * ``retry_after`` — the quote handed to shed clients: the current
+      backlog drained at the observed request service rate, floored at
+      one second so clients never hammer-retry.
+    """
+    deadline_s: Optional[float] = None
+    max_waiting: int = 0
+    shed: list = field(default_factory=list)
+
+    def deadline_for(self, req) -> Optional[float]:
+        return req.deadline_s if req.deadline_s is not None else self.deadline_s
+
+    def expired(self, req, now: float) -> bool:
+        dl = self.deadline_for(req)
+        return dl is not None and (now - req.arrival) > dl
+
+    def overloaded(self, waiting: int) -> bool:
+        return self.max_waiting > 0 and waiting >= self.max_waiting
+
+    def retry_after(self, backlog: int, service_rate_hz: float) -> float:
+        if service_rate_hz <= 0:
+            return max(1.0, float(backlog))
+        return max(1.0, backlog / service_rate_hz)

@@ -21,7 +21,15 @@ theoretical memory model — applied to serving (docs/DESIGN.md §Serving):
   the single-pass prefill (``transformer.forward(return_cache=True)``), the
   rest the compiled extend step.
 
-Request lifecycle: WAITING -> PREFILL -> ACTIVE -> FINISHED.  One request
+Request lifecycle: WAITING -> PREFILL -> ACTIVE -> FINISHED, plus the
+overload exit WAITING -> SHED (docs/DESIGN.md §Resilience): a request whose
+admission deadline lapses, or that arrives past the WAITING-queue overload
+bound, is shed with a client-visible ``retry_after`` quote.  Shedding
+applies ONLY to requests never admitted; once accepted (PREFILL/ACTIVE) a
+request survives even a faulted decode wave — the fault handler evicts the
+wave's slots and *requeues* each accepted request at the head of the queue
+(its generated tokens ride along and prefill re-derives the cache), so an
+injected or real RESOURCE_EXHAUSTED never loses accepted work.  One request
 prefills at a time; its slot is reserved at admission so installation can
 never fail.
 """
@@ -42,17 +50,22 @@ from repro.core import memory_model as mm
 from repro.core.chunking import chunk_spans
 from repro.core.moe import DistContext
 from repro.models import transformer
+from repro.runtime.faults import FaultInjector
+from repro.runtime.guard import ServingGuard, is_oom_error
 from repro.serving import engine
 
-WAITING, PREFILL, ACTIVE, FINISHED = "waiting", "prefill", "active", "finished"
+WAITING, PREFILL, ACTIVE, FINISHED, SHED = ("waiting", "prefill", "active",
+                                            "finished", "shed")
 
 
 @dataclass
 class Request:
     rid: int
-    tokens: np.ndarray                  # (S,) int32 prompt
+    tokens: np.ndarray                  # (S,) int32 prompt (grows on requeue:
+                                        # prompt + generated-so-far)
     max_new_tokens: int
     arrival: float = 0.0                # seconds after scheduler start
+    deadline_s: Optional[float] = None  # admission deadline (None = guard's)
     # -- runtime (scheduler-owned) -----------------------------------------
     state: str = WAITING
     slot: int = -1
@@ -62,6 +75,12 @@ class Request:
     out: list = field(default_factory=list)
     t_first: Optional[float] = None     # first-token time (s after start)
     t_done: Optional[float] = None
+    accepted: bool = False              # ever admitted — shed-exempt
+    prompt: Optional[np.ndarray] = None # original prompt (set at submit)
+    pending_token: int = -1             # requeue: already-sampled token the
+                                        # re-prefill must NOT resample
+    requeues: int = 0
+    retry_after: Optional[float] = None # quote handed back when shed
 
 
 @dataclass(frozen=True)
@@ -75,11 +94,16 @@ class ServeConfig:
                                         # describes the production target)
     weight_bytes: float = mm.WEIGHT_ONLY_BYTES
     temperature: float = 0.0
+    deadline_s: Optional[float] = None  # default admission deadline; a
+                                        # WAITING request older than this is
+                                        # shed with retry-after
+    max_waiting: int = 0                # overload bound on the queue (0 = off)
 
 
 class ContinuousBatchingScheduler:
     def __init__(self, params: dict, cfg: ModelConfig, ctx: DistContext,
-                 scfg: ServeConfig, key: Optional[jax.Array] = None):
+                 scfg: ServeConfig, key: Optional[jax.Array] = None,
+                 injector: Optional[FaultInjector] = None):
         if cfg.encoder_layers or cfg.num_patch_tokens:
             raise ValueError("continuous batching serves token-only decoders; "
                              f"{cfg.name!r} needs per-request encoder state")
@@ -99,6 +123,9 @@ class ContinuousBatchingScheduler:
         self._decode = engine._jit(jax.vmap(
             lambda p, c, t: transformer.decode_step(p, cfg, ctx, c, t),
             in_axes=(None, 0, 0)), donate_cache_arg=1)
+        self.injector = injector
+        self.guard = ServingGuard(deadline_s=scfg.deadline_s,
+                                  max_waiting=scfg.max_waiting)
         # telemetry / invariants
         self.steps = 0
         self.decode_waves = 0
@@ -107,6 +134,9 @@ class ContinuousBatchingScheduler:
         self.modeled_peak = 0.0
         self.admission_order: list[int] = []
         self.finished: list[Request] = []
+        self.shed: list[Request] = []
+        self.requeued: int = 0
+        self.faults: int = 0
 
     def reset(self) -> None:
         """Clear all request state and telemetry but keep the compiled
@@ -121,6 +151,9 @@ class ContinuousBatchingScheduler:
         self.modeled_peak = 0.0
         self.admission_order = []
         self.finished = []
+        self.shed = []
+        self.requeued = 0
+        self.faults = 0
 
     # -- memory model -------------------------------------------------------
 
@@ -145,7 +178,7 @@ class ContinuousBatchingScheduler:
 
     # -- request intake -----------------------------------------------------
 
-    def submit(self, req: Request) -> None:
+    def submit(self, req: Request, now: float = 0.0) -> None:
         s = self.scfg
         if len(req.tokens) + req.max_new_tokens > s.cache_len:
             raise ValueError(
@@ -156,8 +189,61 @@ class ContinuousBatchingScheduler:
                 f"request {req.rid} can never be admitted: modeled bytes for "
                 f"one request ({self.modeled_bytes(1) / 1e9:.2f} GB) exceed "
                 f"{s.hw.alpha:.2f} * {s.hw.hbm_bytes / 1e9:.0f} GB")
+        req.prompt = np.asarray(req.tokens)
+        if self.guard.overloaded(len(self.queue)):     # overload shedding
+            self._shed(req, now)
+            return
         req.state = WAITING
         self.queue.append(req)
+
+    # -- shedding / fault recovery (docs/DESIGN.md §Resilience) --------------
+
+    def _service_rate(self, now: float) -> float:
+        return len(self.finished) / now if now > 0 else 0.0
+
+    def _shed(self, req: Request, now: float) -> None:
+        """Refuse a never-accepted request with a client-visible retry-after
+        (the backlog drained at the observed service rate)."""
+        assert not req.accepted, "accepted requests are never shed"
+        req.state = SHED
+        req.t_done = now
+        backlog = len(self.queue) + self.occupancy()
+        req.retry_after = self.guard.retry_after(backlog + 1,
+                                                 self._service_rate(now))
+        self.shed.append(req)
+
+    def _expire_deadlines(self, now: float) -> None:
+        """Shed WAITING requests whose admission deadline lapsed.  Accepted
+        requeued requests are deadline-exempt: their work is already paid
+        for, and dropping them would violate the no-accepted-loss
+        invariant."""
+        kept = deque()
+        for req in self.queue:
+            if not req.accepted and self.guard.expired(req, now):
+                self._shed(req, now)
+            else:
+                kept.append(req)
+        self.queue = kept
+
+    def _requeue_active(self, now: float) -> None:
+        """A faulted decode wave lost the slot pool's forward progress, not
+        the requests: evict every ACTIVE slot and requeue its request at
+        the head of the queue.  The request keeps its sampled tokens —
+        ``tokens`` becomes prompt + generated-so-far minus the pending one,
+        re-prefill rebuilds the cache, and ``pending_token`` re-arms the
+        decode feed, so greedy output matches an unfaulted run exactly."""
+        for slot in sorted(self.active.keys(), reverse=True):
+            req = self.active.pop(slot)
+            self.free_slots.append(slot)
+            req.tokens = np.concatenate(
+                [req.prompt, np.asarray(req.out[:-1], np.int32)])
+            req.pending_token = req.out[-1]
+            req.chunks_done = 0
+            req.cache = None
+            req.state = WAITING
+            req.requeues += 1
+            self.requeued += 1
+            self.queue.appendleft(req)     # reverse slot order: slot 0 first
 
     def _admit(self) -> None:
         """FIFO admission at step boundaries: a slot must be free, at most
@@ -167,6 +253,7 @@ class ContinuousBatchingScheduler:
                and self._admissible(self.occupancy() + 1)):
             req = self.queue.popleft()
             req.state = PREFILL
+            req.accepted = True
             req.slot = self.free_slots.pop(0)
             self._prefilling = req
             self.admission_order.append(req.rid)
@@ -199,10 +286,17 @@ class ContinuousBatchingScheduler:
             self.cache, req.cache)
         req.cache = None
         req.state = ACTIVE
-        req.t_first = now
+        if req.t_first is None:
+            req.t_first = now
         self.active[req.slot] = req
         self._prefilling = None
-        self._append_token(req, np.asarray(logits[0, -1]), now)
+        if req.pending_token >= 0:
+            # requeued after a faulted wave: the next decode token was
+            # already sampled before the fault — feed it, don't resample
+            req.next_token = req.pending_token
+            req.pending_token = -1
+        else:
+            self._append_token(req, np.asarray(logits[0, -1]), now)
 
     # -- decode -------------------------------------------------------------
 
@@ -235,9 +329,27 @@ class ContinuousBatchingScheduler:
         toks = np.zeros((self.scfg.max_slots, 1, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0, 0] = req.next_token
-        logits, self.cache = self._decode(self.params, self.cache,
-                                          jnp.asarray(toks))
-        logits = np.asarray(logits)       # (slots, 1, 1, V)
+        try:
+            if self.injector is not None:
+                self.injector.maybe_fail_step(self.steps, "decode_wave")
+            logits, self.cache = self._decode(self.params, self.cache,
+                                              jnp.asarray(toks))
+            logits = np.asarray(logits)   # (slots, 1, 1, V): the host fetch
+        except Exception as exc:          # is where a real OOM surfaces
+            if not is_oom_error(exc):
+                raise
+            # faulted wave: no token was appended, the slot pool may hold
+            # garbage — requeue every accepted request and start clean
+            self.faults += 1
+            self._requeue_active(now)
+            # the wave's donated slot pool may be torn — rebuild it; the
+            # requeued requests' re-prefills repopulate their slots
+            one = transformer.init_cache(self.params, self.cfg, 1,
+                                         self.scfg.cache_len, jnp.float32)
+            self.cache = jax.tree.map(
+                lambda l: jnp.broadcast_to(
+                    l[None], (self.scfg.max_slots,) + l.shape), one)
+            return
         self.decode_waves += 1
         for slot, req in list(self.active.items()):
             self._append_token(req, logits[slot, 0, -1], now)
@@ -245,8 +357,12 @@ class ContinuousBatchingScheduler:
     # -- main loop ----------------------------------------------------------
 
     def step(self, now: float = 0.0) -> bool:
-        """One scheduler step: admit, run one prefill chunk, run one decode
-        wave.  Returns False when there was nothing to do."""
+        """One scheduler step: expire lapsed deadlines, admit, run one
+        prefill chunk, run one decode wave.  Returns False when there was
+        nothing to do."""
+        if self.injector is not None:
+            self.injector.maybe_stall(self.steps)      # stalled-prefill chaos
+        self._expire_deadlines(now)
         self._admit()
         busy = False
         if self._prefilling is not None:
@@ -268,7 +384,7 @@ class ContinuousBatchingScheduler:
                or self._prefilling is not None):
             now = time.perf_counter() - t0
             while i < len(pending) and pending[i].arrival <= now:
-                self.submit(pending[i])
+                self.submit(pending[i], now)
                 i += 1
             if not self.step(now) and i < len(pending):
                 time.sleep(min(pending[i].arrival - now, 0.01))
@@ -289,4 +405,10 @@ class ContinuousBatchingScheduler:
             "max_occupancy": self.max_occupancy,
             "modeled_peak_bytes": self.modeled_peak,
             "budget_bytes": self.scfg.hw.alpha * self.scfg.hw.hbm_bytes,
+            "shed": len(self.shed),
+            "retry_after_p50_s": (float(np.percentile(
+                [r.retry_after for r in self.shed], 50))
+                if self.shed else 0.0),
+            "requeues": self.requeued,
+            "faults": self.faults,
         }

@@ -16,6 +16,18 @@ Each step:
      static compilations bit-for-bit).
   3. Router loads feed back to MACT/telemetry; metrics/chunk trace are
      recorded (benchmarks/fig5 reads the trace).
+
+Resilience (docs/DESIGN.md §Resilience): compiled-step execution runs under
+the ``OOMGuard`` degradation ladder — an out-of-memory failure (real
+RESOURCE_EXHAUSTED or injected) rolls back to the pre-step state and
+retries strictly more conservative schedules (deeper chunking -> depth 1 ->
+full recompute) with bounded retries, then audits the memory model
+(modeled vs HLO-derived bytes via launch/hlo_analysis.py) and widens
+``mact_headroom`` when the model under-predicted.  ``resume=True`` makes
+``fit`` self-healing: it restores the newest *valid* checkpoint (corrupt or
+torn saves are skipped by the manifest checksum) along with the warm
+telemetry EMA and MACT hysteresis state, and trains on to the target step —
+bit-identical to a run that never died.
 """
 
 from __future__ import annotations
@@ -38,6 +50,8 @@ from repro.core.moe import DistContext
 from repro.core.telemetry import LoadTelemetry
 from repro.data.pipeline import SyntheticLMData
 from repro.models.transformer import num_moe_layers
+from repro.runtime.faults import FaultInjector
+from repro.runtime.guard import FULL_REMAT, DegradationLadder, OOMGuard
 from repro.training.step import TrainState, init_train_state, make_train_step
 from repro import checkpointing
 
@@ -67,6 +81,13 @@ class Trainer:
     max_compiled_steps: int = 8          # LRU bound on cached compiled steps
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
+    resume: bool = False                 # fit() restores the newest valid
+                                         # checkpoint and treats `steps` as
+                                         # the TARGET step count
+    injector: Optional[FaultInjector] = None   # chaos hooks (runtime/faults)
+    max_oom_retries: int = 4             # ladder bound per step
+    headroom_widen: float = 1.5          # audit: multiply mact_headroom by
+                                         # this when the model under-predicts
     log: list = field(default_factory=list)
     chunk_trace: list = field(default_factory=list)
     pipeline_trace: list = field(default_factory=list)
@@ -99,6 +120,12 @@ class Trainer:
         self.compile_count = 0
         self.evicted_recompile_count = 0
         self._evicted_keys: set = set()
+        self.guard = OOMGuard(
+            DegradationLadder(self.mact.schedule_space(self.max_pipeline_depth)),
+            max_retries=self.max_oom_retries, on_oom=self._oom_audit)
+        self._audit_args: Optional[tuple] = None   # (state, batch) of the
+        self.headroom_widenings: list = []         # attempt being audited
+        self.resumed_from: Optional[int] = None
 
     # -- bounded compiled-step cache -------------------------------------------
     # Keyed by the schedule: a global (chunk bin, pipeline depth) pair of
@@ -113,7 +140,13 @@ class Trainer:
         if key in self._steps:
             self._steps.move_to_end(key)
             return self._steps[key]
-        if key and isinstance(key[0], tuple):        # per-layer vector
+        cfg = self.cfg
+        if key and key[0] == FULL_REMAT:             # ladder floor: largest
+            cfg = dataclasses.replace(self.cfg, remat_policy="full")
+            ctx = dataclasses.replace(self.ctx, moe_chunks=key[1],
+                                      pipeline_chunks=1,
+                                      layer_schedules=None)
+        elif key and isinstance(key[0], tuple):      # per-layer vector
             ctx = dataclasses.replace(
                 self.ctx, layer_schedules=tuple(ScheduleSpec(*s) for s in key))
         else:
@@ -121,7 +154,7 @@ class Trainer:
             ctx = dataclasses.replace(self.ctx, moe_chunks=key[0],
                                       pipeline_chunks=key[1],
                                       layer_schedules=None)
-        fn = jax.jit(make_train_step(self.cfg, ctx, lr=self.lr))
+        fn = jax.jit(make_train_step(cfg, ctx, lr=self.lr))
         self._steps[key] = fn
         self.compile_count += 1
         if key in self._evicted_keys:
@@ -201,36 +234,147 @@ class Trainer:
             return self._vector_key(self.ctx.layer_schedules)
         return tuple(self.choose_schedule())
 
+    # -- resilience (docs/DESIGN.md §Resilience) -------------------------------
+
+    @staticmethod
+    def _key_summary(key: tuple) -> tuple:
+        """(chunks, pipeline) actually run for a compiled-step cache key."""
+        if key and key[0] == FULL_REMAT:
+            return key[1], 1
+        if key and isinstance(key[0], tuple):          # per-layer vector
+            return (max(s[0] for s in key),            # memory-binding layer
+                    max(s[1] for s in key))
+        return key
+
+    def _oom_audit(self, key: tuple, exc: Exception, step: int) -> dict:
+        """Post-hoc memory-model audit after an OOM: log modeled-vs-actual
+        bytes and widen the planning headroom when the model said the
+        failed schedule fit — i.e. it under-predicted the peak."""
+        chunks, depth = self._key_summary(key)
+        if self._last_load is not None:
+            s_pp = self.mact.observed_s_pp(self._last_load,
+                                           self._plan_params()[0])
+        else:
+            import repro.core.memory_model as mm
+            s_pp = mm.worst_case_s_prime(self.seq_len, self.par,
+                                         self.mact.dims.topk)
+        report = self.mact.memory_report(s_pp, chunks, depth)
+        audit = {"step": step, "key": key, "s_pp": float(s_pp),
+                 "modeled_total_gb": report["total_gb"],
+                 "modeled_fits": bool(report["fits"]), "error": str(exc)}
+        if self._audit_args is not None:               # HLO-derived actuals
+            try:                                       # (best-effort: the
+                from repro.launch import hlo_analysis  # failed step may not
+                fn = self._compiled(key)               # even lower)
+                text = fn.lower(*self._audit_args).compile().as_text()
+                audit["hlo_hbm_gb"] = (
+                    hlo_analysis.analyse_module(text)["hbm_bytes"] / 2**30)
+            except Exception:                          # noqa: BLE001
+                audit["hlo_hbm_gb"] = None
+        if report["fits"]:
+            # the model admitted a schedule that OOMed: plan with more margin
+            before = self.mact_headroom
+            self.mact_headroom = before * self.headroom_widen + 1e-2
+            self._layer_schedules = None               # force a fresh plan
+            self._plan_age = 0
+            audit["headroom"] = (before, self.mact_headroom)
+            self.headroom_widenings.append(audit["headroom"])
+        return audit
+
+    def _runtime_extra(self) -> dict:
+        """Host-side planner state a checkpoint must carry for a resumed
+        run to replan warm (and bit-identically)."""
+        return {
+            "telemetry": self.telemetry.state_dict(),
+            "last_load": (None if self._last_load is None
+                          else np.asarray(self._last_load).tolist()),
+            "layer_schedules": (None if self._layer_schedules is None
+                                else [list(s) for s in self._layer_schedules]),
+            "plan_age": self._plan_age,
+            "mact_headroom": self.mact_headroom,
+        }
+
+    def _apply_extra(self, extra: dict) -> None:
+        if not extra:
+            return
+        if extra.get("telemetry"):
+            self.telemetry.load_state_dict(extra["telemetry"])
+        if extra.get("last_load") is not None:
+            self._last_load = np.asarray(extra["last_load"])
+        if extra.get("layer_schedules") is not None:
+            self._layer_schedules = tuple(
+                ScheduleSpec(*s) for s in extra["layer_schedules"])
+        self._plan_age = int(extra.get("plan_age", 0))
+        self.mact_headroom = float(extra.get("mact_headroom",
+                                             self.mact_headroom))
+
+    def _resume_state(self) -> Optional[TrainState]:
+        """Restore the newest VALID checkpoint (corrupt ones are skipped by
+        the manifest checksum) plus the warm planner state; None if the
+        directory holds nothing restorable."""
+        step = checkpointing.latest_step(self.checkpoint_dir)
+        if step is None:
+            return None
+        like = init_train_state(jax.random.PRNGKey(self.seed), self.cfg)
+        state = checkpointing.restore(self.checkpoint_dir, step, like)
+        self._apply_extra(checkpointing.load_extra(self.checkpoint_dir, step))
+        self.resumed_from = step
+        return state
+
     # -- main loop ---------------------------------------------------------------
     def fit(self, steps: int, state: Optional[TrainState] = None,
             verbose: bool = False) -> TrainState:
+        """Run the training loop.
+
+        ``steps`` counts iterations from the given state — except under
+        ``resume=True``, where it is the TARGET total step count: fit
+        restores the newest valid checkpoint and trains the remainder, so
+        crash + re-run converges on the same final step as an uninterrupted
+        run.
+        """
+        if state is None and self.resume and self.checkpoint_dir:
+            state = self._resume_state()
         if state is None:
             state = init_train_state(jax.random.PRNGKey(self.seed), self.cfg)
-        for i in range(steps):
+        n = steps - int(state.step) if self.resume else steps
+        for i in range(max(n, 0)):
+            step_idx = int(state.step)
             key = self._next_schedule_key()
-            if key and isinstance(key[0], tuple):      # per-layer vector
-                chunks = max(s[0] for s in key)        # memory-binding layer
-                pipeline = max(s[1] for s in key)
-            else:
-                chunks, pipeline = key
             batch = {k: jax.numpy.asarray(v)
-                     for k, v in self.data.batch_at(int(state.step)).items()}
+                     for k, v in self.data.batch_at(step_idx).items()}
+
+            def attempt(k, _state=state, _batch=batch, _step=step_idx):
+                if self.injector is not None:
+                    self.injector.maybe_fail_step(_step)   # oom/crash hooks
+                    self.injector.maybe_stall(_step)
+                new_state, metrics = self._compiled(k)(_state, _batch)
+                loss = float(metrics["loss"])          # sync point: a real
+                return new_state, metrics, loss        # OOM surfaces here
+
             t0 = time.perf_counter()
-            state, metrics = self._compiled(key)(state, batch)
-            loss = float(metrics["loss"])          # sync point
+            self._audit_args = (state, batch)
+            n_esc = len(self.guard.escalations)
+            (state, metrics, loss), used = self.guard.run(key, attempt,
+                                                          step_idx)
+            self._audit_args = None
             dt = time.perf_counter() - t0
-            load = np.asarray(metrics["load"])
+            chunks, pipeline = self._key_summary(used)
+            burst = (self.injector.burst_factor(step_idx)
+                     if self.injector is not None else 1.0)
+            load = np.asarray(metrics["load"]) * burst
             self._last_load = load
             if (self.adaptive_mact and self._n_moe
                     and "load_per_layer" in metrics):
-                self.telemetry.update(np.asarray(metrics["load_per_layer"]))
+                self.telemetry.update(
+                    np.asarray(metrics["load_per_layer"]) * burst)
             tgs = self.global_batch * self.seq_len / max(dt, 1e-9)
             rec = {"step": int(state.step), "loss": loss,
                    "ce": float(metrics["ce"]), "aux": float(metrics["aux"]),
                    "grad_norm": float(metrics["grad_norm"]),
                    "chunks": chunks, "pipeline": pipeline, "time_s": dt,
                    "tgs": tgs, "max_load": float(load.max()),
-                   "drops": float(metrics["drops"])}
+                   "drops": float(metrics["drops"]),
+                   "oom_retries": len(self.guard.escalations) - n_esc}
             self.log.append(rec)
             self.chunk_trace.append(chunks)
             self.pipeline_trace.append(pipeline)
@@ -241,5 +385,9 @@ class Trainer:
                       f"c={chunks} tgs={tgs:,.0f}")
             if (self.checkpoint_dir and self.checkpoint_every
                     and int(state.step) % self.checkpoint_every == 0):
-                checkpointing.save(self.checkpoint_dir, int(state.step), state)
+                checkpointing.save(self.checkpoint_dir, int(state.step),
+                                   state, extra=self._runtime_extra())
+                if self.injector is not None:
+                    self.injector.maybe_truncate_checkpoint(
+                        step_idx, self.checkpoint_dir)
         return state

@@ -1,0 +1,353 @@
+"""Recovery paths: fault injection, the OOM degradation ladder,
+crash-consistent checkpoint/resume, and the serving shed/requeue
+invariants (docs/DESIGN.md §Resilience)."""
+
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro import checkpointing
+from repro.configs import get_config
+from repro.core.chunking import ScheduleSpec
+from repro.core.moe import DistContext
+from repro.core.telemetry import LoadTelemetry
+from repro.runtime.faults import (FaultInjector, FaultSpec, SimulatedCrash,
+                                  SimulatedOOM, parse_spec)
+from repro.runtime.guard import (FULL_REMAT, DegradationLadder, OOMGuard,
+                                 ServingGuard, is_oom_error)
+from repro.training.step import init_train_state
+from repro.training.trainer import Trainer
+
+
+def _leaves_equal(a, b):
+    la, lb = jax.tree_util.tree_leaves(a), jax.tree_util.tree_leaves(b)
+    return len(la) == len(lb) and all(
+        np.array_equal(np.asarray(x), np.asarray(y)) for x, y in zip(la, lb))
+
+
+# -- fault injector ----------------------------------------------------------
+
+def test_parse_spec_grammar():
+    specs = parse_spec("oom@3,burst@2x1.5,ckpt_truncate@4*2")
+    assert [(s.kind, s.at, s.magnitude, s.times) for s in specs] == [
+        ("oom", 3, 2.0, 1), ("burst", 2, 1.5, 1), ("ckpt_truncate", 4, 2.0, 2)]
+    with pytest.raises(ValueError):
+        parse_spec("oom")                      # missing @step
+    with pytest.raises(ValueError):
+        FaultSpec(kind="nonsense", at=0)
+
+
+def test_injector_fires_once_then_disarms():
+    inj = FaultInjector.from_string("oom@3")
+    inj.maybe_fail_step(2)                     # not armed yet
+    with pytest.raises(SimulatedOOM):
+        inj.maybe_fail_step(3)
+    inj.maybe_fail_step(3)                     # fired out
+    inj.maybe_fail_step(7)
+    assert inj.fired == [("oom", 3)]
+
+
+def test_injector_burst_factor_consistent():
+    inj = FaultInjector.from_string("burst@2x3.0")
+    assert inj.burst_factor(1) == 1.0
+    assert inj.burst_factor(2) == 3.0          # one armed burst, one factor
+    assert inj.burst_factor(2) == 1.0
+
+
+def test_is_oom_error_classification():
+    assert is_oom_error(SimulatedOOM())
+    assert is_oom_error(MemoryError("boom"))
+    assert is_oom_error(RuntimeError("RESOURCE_EXHAUSTED: out of memory"))
+    assert not is_oom_error(ValueError("shape mismatch"))
+    assert not is_oom_error(SimulatedCrash("died"))
+
+
+# -- degradation ladder ------------------------------------------------------
+
+SPACE = tuple(ScheduleSpec(b, d) for b in (1, 2, 4, 8) for d in (1, 2)
+              if b >= d and b % d == 0)
+
+
+def test_ladder_rungs_strictly_more_conservative():
+    lad = DegradationLadder(SPACE)
+    assert lad.rungs_after((2, 2)) == [(2, 1), (4, 1), (8, 1), (FULL_REMAT, 8)]
+    assert lad.rungs_after((8, 1)) == [(FULL_REMAT, 8)]
+    assert lad.rungs_after((FULL_REMAT, 8)) == []
+    # a per-layer vector escalates from its least-chunked layer
+    vec = (ScheduleSpec(2, 1), ScheduleSpec(4, 2))
+    assert lad.rungs_after(vec)[0] == (2, 1)
+
+
+def test_guard_escalates_then_succeeds():
+    g = OOMGuard(DegradationLadder(SPACE), max_retries=3)
+    seen = []
+
+    def attempt(k):
+        seen.append(k)
+        if len(seen) < 3:
+            raise SimulatedOOM("test")
+        return "ok"
+
+    result, used = g.run((2, 2), attempt, step=0)
+    assert result == "ok" and used == (4, 1)
+    assert [e["failed"] for e in g.escalations] == [(2, 2), (2, 1)]
+
+
+def test_guard_bounded_retries_then_raises():
+    g = OOMGuard(DegradationLadder(SPACE), max_retries=2)
+
+    def always_oom(k):
+        raise SimulatedOOM("test")
+
+    with pytest.raises(RuntimeError, match="ladder exhausted"):
+        g.run((1, 1), always_oom, step=0)
+    assert len(g.escalations) == 3             # first try + 2 retries
+
+
+def test_guard_propagates_non_oom():
+    g = OOMGuard(DegradationLadder(SPACE))
+
+    def crash(k):
+        raise SimulatedCrash("host died")
+
+    with pytest.raises(SimulatedCrash):
+        g.run((1, 1), crash, step=0)
+    assert g.escalations == []
+
+
+# -- crash-consistent checkpointing ------------------------------------------
+
+def _tree(step=3):
+    return {"w": np.arange(6, dtype=np.float32).reshape(2, 3),
+            "b": np.float32(step)}
+
+
+def test_checkpoint_checksum_detects_truncation(tmp_path):
+    d = str(tmp_path)
+    checkpointing.save(d, 2, _tree())
+    checkpointing.save(d, 4, _tree())
+    assert checkpointing.latest_step(d) == 4
+    payload = os.path.join(d, "step_00000004.npz")
+    with open(payload, "r+b") as f:
+        f.truncate(os.path.getsize(payload) // 2)
+    ok, reason = checkpointing.verify(d, 4)
+    assert not ok and "checksum" in reason
+    # the torn save is skipped, not returned
+    assert checkpointing.valid_steps(d) == [2]
+    assert checkpointing.latest_step(d) == 2
+
+
+def test_checkpoint_missing_manifest_is_invalid(tmp_path):
+    d = str(tmp_path)
+    checkpointing.save(d, 2, _tree())
+    os.remove(os.path.join(d, "step_00000002.json"))
+    assert checkpointing.latest_step(d) is None
+
+
+def test_restore_validates_structure(tmp_path):
+    d = str(tmp_path)
+    checkpointing.save(d, 1, _tree())
+    restored = checkpointing.restore(d, 1, _tree())
+    assert np.array_equal(restored["w"], _tree()["w"])
+    with pytest.raises(ValueError, match="leaves"):
+        checkpointing.restore(d, 1, {"w": np.zeros((2, 3), np.float32)})
+    with pytest.raises(ValueError, match="treedef"):
+        checkpointing.restore(
+            d, 1, {"w": np.zeros((2, 3), np.float32),
+                   "c": np.float32(0)})      # same leaf count, different tree
+
+
+def test_checkpoint_extra_roundtrip(tmp_path):
+    d = str(tmp_path)
+    extra = {"telemetry": {"steps": 3, "ema": [[1.0, 2.0]]},
+             "mact_headroom": 0.3}
+    checkpointing.save(d, 1, _tree(), extra=extra)
+    assert checkpointing.load_extra(d, 1) == extra
+
+
+def test_telemetry_state_roundtrip():
+    t = LoadTelemetry(2, 3, decay=0.5)
+    t.update(np.ones((2, 3)))
+    t.update(np.full((2, 3), 3.0))
+    t2 = LoadTelemetry(2, 3, decay=0.5)
+    t2.load_state_dict(t.state_dict())
+    assert t2.steps == 2
+    assert np.array_equal(t2.loads, t.loads)
+    with pytest.raises(ValueError):
+        LoadTelemetry(4, 4).load_state_dict(t.state_dict())
+
+
+# -- trainer recovery paths --------------------------------------------------
+
+CFG = get_config("deepseek-mini-8l").reduced()
+TRAIN_KW = dict(seq_len=32, global_batch=2, lr=1e-3)
+
+
+def test_injected_oom_walks_ladder_and_completes():
+    inj = FaultInjector.from_string("oom@2")
+    tr = Trainer(CFG, DistContext(), injector=inj, **TRAIN_KW)
+    state = tr.fit(4)
+    assert int(state.step) == 4
+    assert len(tr.guard.escalations) == 1
+    assert tr.log[2]["oom_retries"] == 1
+    assert tr.chunk_trace[2] > tr.chunk_trace[1]   # escalated = deeper chunks
+    assert all(r["oom_retries"] <= tr.max_oom_retries for r in tr.log)
+
+
+def test_oom_audit_widens_headroom_on_underprediction():
+    inj = FaultInjector.from_string("oom@1")
+    tr = Trainer(CFG, DistContext(), injector=inj, **TRAIN_KW)
+    before = tr.mact_headroom
+    tr.fit(3)
+    # the model said (1,1) fit, the step OOMed anyway: plan wider
+    assert tr.headroom_widenings and tr.mact_headroom > before
+    assert tr.guard.audits[0]["modeled_fits"] is True
+
+
+def test_repeated_oom_reaches_full_remat_floor():
+    inj = FaultInjector(specs=[FaultSpec(kind="oom", at=1, times=4)])
+    tr = Trainer(CFG, DistContext(), injector=inj, **TRAIN_KW)
+    state = tr.fit(2)
+    assert int(state.step) == 2
+    failed = [e["failed"] for e in tr.guard.escalations]
+    assert len(failed) == 4 and failed[-1] == (8, 1)
+    # the step that survived ran the full-recompute floor schedule
+    assert (FULL_REMAT, 8) in tr._steps
+
+
+def test_ladder_exhaustion_raises():
+    inj = FaultInjector(specs=[FaultSpec(kind="oom", at=1, times=99)])
+    tr = Trainer(CFG, DistContext(), injector=inj, max_oom_retries=2,
+                 **TRAIN_KW)
+    with pytest.raises(RuntimeError, match="ladder exhausted"):
+        tr.fit(3)
+
+
+def test_kill_and_resume_bit_parity(tmp_path):
+    kw = dict(adaptive_mact=True, replan_interval=2, checkpoint_every=2,
+              **TRAIN_KW)
+    # run A: uninterrupted to step 6
+    state_a = Trainer(CFG, DistContext(), checkpoint_dir=str(tmp_path / "a"),
+                      **kw).fit(6)
+    # run B: killed at step 4, resumed to 6
+    inj = FaultInjector.from_string("crash@4")
+    with pytest.raises(SimulatedCrash):
+        Trainer(CFG, DistContext(), checkpoint_dir=str(tmp_path / "b"),
+                injector=inj, **kw).fit(6)
+    tr = Trainer(CFG, DistContext(), checkpoint_dir=str(tmp_path / "b"),
+                 resume=True, **kw)
+    state_b = tr.fit(6)
+    assert tr.resumed_from == 4
+    assert int(state_b.step) == 6
+    assert _leaves_equal(state_a, state_b)
+
+
+def test_resume_skips_truncated_checkpoint(tmp_path):
+    d = str(tmp_path)
+    inj = FaultInjector.from_string("ckpt_truncate@4")
+    Trainer(CFG, DistContext(), checkpoint_dir=d, checkpoint_every=2,
+            injector=inj, **TRAIN_KW).fit(6)
+    assert checkpointing.valid_steps(d) == [2, 4]   # step-6 save was torn
+    tr = Trainer(CFG, DistContext(), checkpoint_dir=d, resume=True,
+                 **TRAIN_KW)
+    state = tr.fit(6)
+    assert tr.resumed_from == 4 and int(state.step) == 6
+
+
+def test_resume_with_nothing_to_do(tmp_path):
+    d = str(tmp_path)
+    Trainer(CFG, DistContext(), checkpoint_dir=d, checkpoint_every=2,
+            **TRAIN_KW).fit(4)
+    tr = Trainer(CFG, DistContext(), checkpoint_dir=d, resume=True,
+                 **TRAIN_KW)
+    state = tr.fit(4)                         # already at the target
+    assert int(state.step) == 4 and tr.log == []
+
+
+# -- serving shed / requeue invariants ---------------------------------------
+
+@pytest.fixture(scope="module")
+def serve_setup():
+    from repro.models import transformer
+    cfg = get_config("mixtral-8x7b").reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    return params, cfg, DistContext()
+
+
+def _serve_trace(cfg, n=4, gen=5):
+    from repro.serving.scheduler import Request
+    rng = np.random.default_rng(0)
+    return [Request(rid=i, tokens=rng.integers(0, cfg.vocab_size,
+                                               16).astype(np.int32),
+                    max_new_tokens=gen, arrival=0.0) for i in range(n)]
+
+
+def test_decode_fault_requeues_without_loss(serve_setup):
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+    params, cfg, ctx = serve_setup
+    scfg = ServeConfig(max_slots=2, cache_len=32, prefill_chunk=8)
+    ref_sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+    ref_sched.run(_serve_trace(cfg))
+    ref = {r.rid: list(r.out) for r in ref_sched.finished}
+
+    inj = FaultInjector.from_string("oom@3")
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg, injector=inj)
+    m = sched.run(_serve_trace(cfg))
+    got = {r.rid: list(r.out) for r in sched.finished}
+    assert m["faults"] == 1 and m["requeues"] >= 1
+    # zero accepted-request loss, and greedy outputs unchanged by the fault
+    assert set(sched.admission_order) == set(got)
+    assert got == ref
+    assert all(r.requeues <= 1 or r.pending_token == -1
+               for r in sched.finished)
+
+
+def test_deadline_expiry_sheds_waiting_with_retry_after(serve_setup):
+    from repro.serving.scheduler import (SHED, ContinuousBatchingScheduler,
+                                         ServeConfig)
+    params, cfg, ctx = serve_setup
+    scfg = ServeConfig(max_slots=1, cache_len=32, prefill_chunk=8,
+                       deadline_s=0.0)        # nothing waits, ever
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+    m = sched.run(_serve_trace(cfg))
+    assert m["shed"] >= 1
+    for r in sched.shed:
+        assert r.state == SHED and not r.accepted
+        assert r.retry_after is not None and r.retry_after >= 1.0
+
+
+def test_overload_bound_sheds_at_submit(serve_setup):
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+    params, cfg, ctx = serve_setup
+    scfg = ServeConfig(max_slots=1, cache_len=32, prefill_chunk=8,
+                       max_waiting=1)
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+    for req in _serve_trace(cfg, n=4):
+        sched.submit(req)
+    assert len(sched.queue) <= 1 + 1          # bound + the one being admitted
+    assert len(sched.shed) >= 2
+
+
+def test_accepted_requests_are_deadline_exempt(serve_setup):
+    """A requeued (accepted) request older than the deadline still runs —
+    the no-accepted-loss invariant beats the admission deadline."""
+    from repro.serving.scheduler import (SHED, WAITING,
+                                         ContinuousBatchingScheduler,
+                                         ServeConfig)
+    params, cfg, ctx = serve_setup
+    scfg = ServeConfig(max_slots=2, cache_len=32, prefill_chunk=8,
+                       deadline_s=0.5)
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+    fresh, requeued = _serve_trace(cfg, n=2)
+    sched.submit(fresh, now=0.0)
+    sched.submit(requeued, now=0.0)
+    requeued.accepted = True              # as _requeue_active leaves it
+    sched._expire_deadlines(now=10.0)     # both far past the deadline
+    assert fresh.state == SHED and fresh.retry_after >= 1.0
+    assert requeued.state == WAITING
+    assert [r.rid for r in sched.queue] == [requeued.rid]
+    assert not any(r.accepted for r in sched.shed)
