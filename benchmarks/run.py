@@ -13,11 +13,12 @@ import time
 from benchmarks import (ablation_capacity, adaptive_microbench,
                         chaos_harness, compiled_memory, dispatch_microbench,
                         fig2_distribution, fig4_throughput, fig5_mact,
-                        pipeline_microbench, roofline, serving_microbench,
-                        table4_memory)
+                        fused_microbench, pipeline_microbench, roofline,
+                        serving_microbench, table4_memory)
 
 SUITES = {
     "dispatch": dispatch_microbench.run,  # single-sort planner vs old path
+    "fused": fused_microbench.run,        # 1-launch fused leg + autotuner
     "pipeline": pipeline_microbench.run,  # sequential vs pipelined FCDA
     "adaptive": adaptive_microbench.run,  # per-layer MACT vs static global
     "serving": serving_microbench.run,    # continuous vs static batching

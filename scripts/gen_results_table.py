@@ -1,16 +1,23 @@
 #!/usr/bin/env python3
 """Render the README results tables from the BENCH_*.json artifacts.
 
-  python scripts/gen_results_table.py        # markdown to stdout
+  python scripts/gen_results_table.py           # markdown to stdout
+  PYTHONPATH=src python scripts/gen_results_table.py dryrun \
+      > results/tables.md                       # EXPERIMENTS.md dry-run tables
 
-Paste the output into README.md's "Results" section after re-running
-`PYTHONPATH=src python -m benchmarks.run dispatch pipeline adaptive`.
+Paste the default output into README.md's "Results" section after re-running
+`PYTHONPATH=src python -m benchmarks.run dispatch fused pipeline adaptive`.
+The ``dryrun`` mode regenerates the roofline tables from results/dryrun
+(formerly the root-level scripts_tables.py).
 """
 
 from __future__ import annotations
 
+import glob
 import json
+import os
 import pathlib
+import sys
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 
@@ -30,6 +37,37 @@ def dispatch_table() -> list[str]:
         out.append(f"| {r['chunks']} | {r['two_sort']:.2f} "
                    f"| {r['single_sort']:.2f} "
                    f"| {r['speedup_single_vs_two']:.2f}x |")
+    return out
+
+
+def fused_table() -> list[str]:
+    d = _load("BENCH_fused.json")
+    if not d:
+        return ["(BENCH_fused.json missing — run `benchmarks.run fused`)"]
+    out = ["| chunks | tokens/chunk | three-launch ms | fused ms | speedup "
+           "| modeled HBM ratio |",
+           "|---|---|---|---|---|---|"]
+    for r in d["rows"]:
+        out.append(f"| {r['chunks']} | {r['tokens_per_chunk']} "
+                   f"| {r['three_launch_ms']:.3f} "
+                   f"| **{r['fused_ms']:.3f}** | {r['speedup']:.2f}x "
+                   f"| {r['hbm_model_ratio']:.0f}x |")
+    out.append("")
+    out.append("| tokens | heuristic ms | autotuned ms | winner bk "
+               "| speedup |")
+    out.append("|---|---|---|---|---|")
+    for r in d["autotune"]:
+        out.append(f"| {r['shape'][0]} | {r['heuristic_ms']:.3f} "
+                   f"| **{r['autotuned_ms']:.3f}** | {r['winner']['bk']} "
+                   f"| {r['speedup_vs_heuristic']:.2f}x |")
+    m = d["mact"]
+    sched = "; ".join(
+        f"seq {r['seq_len']}: {tuple(r['schedule_three_launch'])} -> "
+        f"{tuple(r['schedule_fused'])}" for r in m["rows"])
+    ratio = m["rows"][0]["s_prime_max_ratio"]
+    out += ["", f"MACT schedules ({m['arch']}, {m['parallelism']}, "
+            f"measured M_sta {m['static_gb']:.0f} GB), (bin, depth) "
+            f"three-launch -> fused: {sched}.  Fused s'_max x{ratio:.2f}."]
     return out
 
 
@@ -124,9 +162,85 @@ def chaos_table() -> list[str]:
     return out
 
 
+# ---------------------------------------------------------------------------
+# dry-run roofline tables (results/dryrun -> EXPERIMENTS.md), formerly the
+# root-level scripts_tables.py; needs PYTHONPATH=src for the repro imports
+# ---------------------------------------------------------------------------
+
+DRYRUN_RESULTS = "results/dryrun"
+DRYRUN_SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+DRYRUN_HEADER = (
+    "| arch | shape | mesh | chunks | compute s | memory s | collective s "
+    "| dominant | useful-FLOPs ratio | peak GB/dev | coll GB/dev |\n"
+    "|---|---|---|---|---|---|---|---|---|---|---|")
+
+
+def _model_flops(arch, shape_name):
+    from repro.configs import SHAPES, get_config
+    from repro.core.memory_model import active_params, total_params
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    n = active_params(cfg) if cfg.moe else total_params(cfg)
+    if shape.mode == "train":
+        return 6 * n * shape.global_batch * shape.seq_len
+    if shape.mode == "prefill":
+        return 2 * n * shape.global_batch * shape.seq_len
+    return 2 * n * shape.global_batch
+
+
+def _dryrun_row(r):
+    arch, shape, mesh = r["arch"], r["shape"], r["mesh"]
+    if r["status"] == "skipped":
+        return (f"| {arch} | {shape} | {mesh} | — | "
+                f"skipped: sub-quadratic rule |||||||")
+    if r["status"] != "ok":
+        return (f"| {arch} | {shape} | {mesh} | — | "
+                f"ERROR {r.get('error', '')[:40]} |||||||")
+    ro, m, c = r["roofline"], r["memory"], r["cost"]
+    chips = 512 if mesh == "2x16x16" else 256
+    useful = _model_flops(arch, shape) / max(c["flops_per_device"] * chips, 1)
+    return (f"| {arch} | {shape} | {mesh} | c={r.get('chunks', '')} "
+            f"| {ro['t_compute_s']:.3f} | {ro['t_memory_s']:.3f} "
+            f"| {ro['t_collective_s']:.3f} | **{ro['dominant']}** "
+            f"| {min(useful, 99):.2f} | {m['peak_device_gb']:.1f} "
+            f"| {r['collectives']['total_bytes'] / 1e9:.0f} |")
+
+
+def dryrun_tables() -> None:
+    recs = {}
+    for p in sorted(glob.glob(os.path.join(DRYRUN_RESULTS, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        recs[(r.get("arch"), r.get("shape"), r.get("mesh"),
+              r.get("tag", ""))] = r
+    archs = sorted({k[0] for k in recs if k[0]})
+    for mesh in ("16x16", "2x16x16"):
+        print(f"\n### Mesh {mesh} ({256 if mesh == '16x16' else 512} chips)\n")
+        print(DRYRUN_HEADER)
+        for arch in archs:
+            for shape in DRYRUN_SHAPES:
+                r = recs.get((arch, shape, mesh, ""))
+                if r:
+                    print(_dryrun_row(r))
+    print("\n### Optimized-variant records (tags)\n")
+    print(DRYRUN_HEADER.replace("| chunks |", "| tag/chunks |"))
+    for key in sorted(recs):
+        if key[3]:
+            r = recs[key]
+            row = _dryrun_row(r)
+            row = row.replace(f"| c={r.get('chunks', '')} ",
+                              f"| {key[3]} c={r.get('chunks', '')} ", 1)
+            print(row)
+
+
 def main() -> None:
+    if len(sys.argv) > 1 and sys.argv[1] == "dryrun":
+        dryrun_tables()
+        return
     print("### Dispatch planning (single-sort vs two-sort, CPU)\n")
     print("\n".join(dispatch_table()))
+    print("\n### Fused MoE leg (single launch vs three, interpret)\n")
+    print("\n".join(fused_table()))
     print("\n### Pipelined FCDA (8-device host mesh)\n")
     print("\n".join(pipeline_table()))
     print("\n### Adaptive per-layer MACT (drifting skewed load)\n")

@@ -35,7 +35,7 @@ from repro.core import dispatch as dsp
 from repro.core.chunking import ChunkStages, chunked_pipeline
 from repro.core.router import route
 from repro.kernels.ops import (combine_rows, dispatch_rows, expert_ffn,
-                               ragged_expert_ffn)
+                               moe_ffn as fused_moe_leg, ragged_expert_ffn)
 
 #: default ragged-layout row-block size; per-run override via
 #: DistContext.ragged_block (core/moe.py)
@@ -46,7 +46,7 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
               chunks: int, remat: bool, ep_axis: str, all_axes: tuple,
               use_pallas: bool, ragged: bool = False,
               interpret: bool = False, pipeline: int = 1,
-              ragged_block: int = RAGGED_BLOCK):
+              ragged_block: int = RAGGED_BLOCK, fused: bool = False):
     """Per-device body. x_l: (B_l, S_l, d) local tokens."""
     peers = compat.axis_size(ep_axis)
     E = moe_cfg.num_experts
@@ -98,7 +98,7 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
         # reconstructs every row's expert (dsp.eids_from_counts)
         rows = recv.reshape(peers * cap_send, d)
         local_e = dsp.eids_from_counts(recv_cnt, cap_send)
-        if ragged:
+        if ragged or fused:
             # MegaBlocks-style flat layout: R worst-case rows + block padding
             # instead of (E_local, cap_recv) per-expert buffers — E_local/k
             # fewer buffer rows, and the Pallas kernels predicate off blocks
@@ -106,14 +106,32 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
             R = peers * cap_send + e_local * ragged_block
             R = -(-R // ragged_block) * ragged_block
             plan_r = dsp.recv_ragged_plan(recv_cnt, local_e, R, ragged_block)
-            buf = dispatch_rows(rows, plan_r.slots, R,
-                                total_rows=plan_r.total_rows,
-                                use_pallas=use_pallas, interpret=interpret)
-            h = ragged_expert_ffn(buf, w1, w3, w2, plan_r.block_to_expert,
-                                  plan_r.total_rows, block_m=ragged_block,
-                                  use_pallas=use_pallas, interpret=interpret)
-            back = combine_rows(h, plan_r.slots, None, plan_r.total_rows,
-                                use_pallas=use_pallas, interpret=interpret)
+            if fused:
+                # single-launch leg (kernels/fused_moe.py): dispatch +
+                # SwiGLU + down-proj + combine in one persistent kernel —
+                # the (R, d) buffer never materializes in HBM on forward.
+                # The router weight is applied after the return all-to-all
+                # (stage_combine), so this combine is unweighted.
+                back = fused_moe_leg(rows, w1, w3, w2, plan_r.slots,
+                                     plan_r.block_to_expert,
+                                     plan_r.total_rows, None,
+                                     block_m=ragged_block,
+                                     use_pallas=use_pallas,
+                                     interpret=interpret)
+            else:
+                buf = dispatch_rows(rows, plan_r.slots, R,
+                                    total_rows=plan_r.total_rows,
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
+                h = ragged_expert_ffn(buf, w1, w3, w2,
+                                      plan_r.block_to_expert,
+                                      plan_r.total_rows,
+                                      block_m=ragged_block,
+                                      use_pallas=use_pallas,
+                                      interpret=interpret)
+                back = combine_rows(h, plan_r.slots, None, plan_r.total_rows,
+                                    use_pallas=use_pallas,
+                                    interpret=interpret)
             back = back.reshape(peers, cap_send, d)
             drops_e = plan_r.drops
         else:
@@ -163,16 +181,18 @@ def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
                chunks: int = 1, remat: bool = True,
                use_pallas: bool = False, ragged: bool = False,
                interpret: bool = False, pipeline: int = 1,
-               ragged_block: int = RAGGED_BLOCK):
+               ragged_block: int = RAGGED_BLOCK, fused: bool = False):
     """x: (B, S, d) global -> (y, stats).  B sharded over batch_axes, S over
     ep_axis (the EP group = one row of the model axis).  ``pipeline`` is the
-    FCDA schedule depth: 1 = sequential loop, >= 2 = overlapped chunks."""
+    FCDA schedule depth: 1 = sequential loop, >= 2 = overlapped chunks.
+    ``fused`` runs the local expert leg as ONE kernel launch over the ragged
+    layout (kernels/fused_moe.py) instead of dispatch/FFN/combine."""
     all_axes = tuple(batch_axes) + (ep_axis,)
     fn = functools.partial(
         _ep_local, moe_cfg=moe_cfg, chunks=chunks, remat=remat,
         ep_axis=ep_axis, all_axes=all_axes, use_pallas=use_pallas,
         ragged=ragged, interpret=interpret, pipeline=pipeline,
-        ragged_block=ragged_block)
+        ragged_block=ragged_block, fused=fused)
     x_spec = P(tuple(batch_axes), ep_axis, None)
     stats_spec = {"aux_loss": P(), "load": P(None), "drops": P()}
     return shard_map(

@@ -50,6 +50,10 @@ class MACTController:
     dtype_bytes: int = 2
     bytes_per_param: float = mm.TRAIN_STATE_BYTES
     static_override: Optional[float] = None   # use a *measured* M_sta instead
+    fused: bool = False                  # fused expert leg: Eq. 2/8 lose the
+                                         # 2h dispatch-buffer term, so s'_max
+                                         # grows and the planner picks coarser
+                                         # bins (docs/DESIGN.md §6)
     history: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -61,7 +65,7 @@ class MACTController:
     def s_prime_max(self) -> float:
         return mm.s_prime_max(self.dims, self.seq_len, self.par, self.hw,
                               self.static, copies=self.copies,
-                              dtype_bytes=self.dtype_bytes)
+                              dtype_bytes=self.dtype_bytes, fused=self.fused)
 
     # -- s'' from router statistics -------------------------------------------
     def observed_s_pp(self, load: np.ndarray, ep_size: Optional[int] = None) -> float:
@@ -216,7 +220,8 @@ class MACTController:
         act = mm.activation_bytes(self.dims, self.seq_len, s_pp, self.par,
                                   copies=self.copies, chunks=chunks,
                                   dtype_bytes=self.dtype_bytes,
-                                  pipeline_depth=pipeline_depth)
+                                  pipeline_depth=pipeline_depth,
+                                  fused=self.fused)
         return {
             "static_gb": self.static / 2**30,
             "activation_gb": act / 2**30,

@@ -96,26 +96,43 @@ def shared_act_bytes(dims: LayerDims, s: int, par: Parallelism,
     return dtype_bytes * par.b * s * per_tok / (par.t * par.c)
 
 
+def _moe_per_token(dims: LayerDims, fused: bool) -> float:
+    """Per-received-token MoE activation width (Table 2's 2h + 2g_e).
+
+    The 2h half is the (R, d) dispatch buffer's HBM round trip (dispatch
+    output + FFN output awaiting combine).  The fused persistent kernel
+    (kernels/fused_moe.py, docs/DESIGN.md §6) keeps those tiles in VMEM for
+    the whole launch, so under ``fused`` that term vanishes and only the
+    2g_e backward-recompute transient (h1/h3 inside the chunk's VJP)
+    remains — which is what lets MACT choose coarser chunking."""
+    return (0 if fused else 2 * dims.h) + 2 * dims.g_e
+
+
 def moe_act_bytes(dims: LayerDims, s_prime: float, par: Parallelism,
-                  dtype_bytes: int = 2) -> float:
+                  dtype_bytes: int = 2, *, fused: bool = False) -> float:
     """The received-token-proportional MoE term of Table 2."""
-    return dtype_bytes * par.b * s_prime * (2 * dims.h + 2 * dims.g_e) / (par.t * par.c)
+    return (dtype_bytes * par.b * s_prime * _moe_per_token(dims, fused)
+            / (par.t * par.c))
 
 
 def activation_bytes(dims: LayerDims, s: int, s_prime: float, par: Parallelism,
                      *, copies: int = 1, chunks: int = 1,
-                     dtype_bytes: int = 2, pipeline_depth: int = 1) -> float:
+                     dtype_bytes: int = 2, pipeline_depth: int = 1,
+                     fused: bool = False) -> float:
     """Eq. (2) peak activation, with FCDA chunking dividing the MoE term.
 
     ``chunks=1`` is the standard (paper Method 1) layout; ``chunks=c`` models
     MemFine where only one chunk's dispatch buffers are live/stored at a time.
     ``pipeline_depth=d`` models the overlapped schedule where ``min(d, c)``
     chunks are in flight at once (docs/DESIGN.md §Pipeline) — the extra live
-    copy the pipeline trades for all-to-all/compute overlap.
+    copy the pipeline trades for all-to-all/compute overlap.  ``fused``
+    models the single-launch expert leg, which removes the dispatch buffer's
+    2h from the per-chunk term (see ``_moe_per_token``).
     """
     shared = shared_act_bytes(dims, s, par, dtype_bytes)
     live = min(max(pipeline_depth, 1), chunks)
-    moe = moe_act_bytes(dims, s_prime, par, dtype_bytes) * live / chunks
+    moe = moe_act_bytes(dims, s_prime, par, dtype_bytes,
+                        fused=fused) * live / chunks
     return copies * (shared + moe)
 
 
@@ -221,11 +238,17 @@ def fits(static: float, act: float, hw: HardwareProfile) -> bool:
 
 
 def s_prime_max(dims: LayerDims, s: int, par: Parallelism, hw: HardwareProfile,
-                static: float, *, copies: int = 1, dtype_bytes: int = 2) -> float:
-    """Eq. (8): the max per-GPU received-token count that still fits."""
+                static: float, *, copies: int = 1, dtype_bytes: int = 2,
+                fused: bool = False) -> float:
+    """Eq. (8): the max per-GPU received-token count that still fits.
+
+    Under the fused expert leg the per-token denominator loses the 2h
+    dispatch-buffer term, so s'_max grows by (1 + h/g_e) — the model-level
+    statement of why fusion lets MACT pick coarser chunking (Eq. 9)."""
     budget = hw.alpha * hw.hbm_bytes - static - copies * shared_act_bytes(
         dims, s, par, dtype_bytes)
-    denom = copies * dtype_bytes * par.b * (2 * dims.h + 2 * dims.g_e) / (par.t * par.c)
+    denom = (copies * dtype_bytes * par.b * _moe_per_token(dims, fused)
+             / (par.t * par.c))
     return budget / denom
 
 

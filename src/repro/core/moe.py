@@ -47,6 +47,10 @@ class DistContext:
                                            # (CPU dry-run of the kernel path)
     moe_strategy: str = "auto"             # overrides MoEConfig.strategy
     moe_ragged: bool = False               # MegaBlocks-style flat expert buffers
+    moe_fused: bool = False                # single-launch fused expert leg over
+                                           # the ragged layout (implies it):
+                                           # kernels/fused_moe.py; Eq. 2 loses
+                                           # the dispatch-buffer term
     ragged_block: int = 128                # ragged-layout row-block size
     layer_schedules: Optional[tuple] = None  # adaptive MACT: one ScheduleSpec
                                            # (chunks, depth) per MoE layer, in
@@ -208,7 +212,8 @@ def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, ctx: DistContext):
                               interpret=ctx.pallas_interpret,
                               ragged=ctx.moe_ragged,
                               pipeline=ctx.pipeline_chunks,
-                              ragged_block=ctx.ragged_block)
+                              ragged_block=ctx.ragged_block,
+                              fused=ctx.moe_fused)
         stats = dict(stats)
         stats["aux_loss"] = stats["aux_loss"] / ctx.moe_chunks
     elif strategy == "tp_gspmd":

@@ -35,7 +35,7 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import pick_block as _blocks
+from repro.kernels.tiling import choose_block, resolve_tiles
 
 
 def _scatter_kernel(src_ref, rows_ref, x_ref, w_ref, o_ref, *, bm: int):
@@ -61,33 +61,43 @@ def _scatter_kernel(src_ref, rows_ref, x_ref, w_ref, o_ref, *, bm: int):
 
 
 def scatter_rows(x: jax.Array, src: jax.Array, total_rows,
-                 weights: jax.Array | None = None, *, block_m: int = 8,
+                 weights: jax.Array | None = None, *,
+                 block_m: int | None = None,
                  interpret: bool = False) -> jax.Array:
     """x: (T, d) tokens; src: (R,) int32 source-row map (-1 = empty slot)
     -> (R, d) dispatch buffer.  ``weights``: optional per-slot scale (R,)
     (used by the combine-backward, where the router weight rides along).
-    Row-blocks past ``total_rows`` are skipped (predicated off)."""
+    Row-blocks past ``total_rows`` are skipped (predicated off); when the
+    chosen block does not divide R, src is padded with -1 (dead slots) and
+    the padded rows sliced off — any block size is legal."""
     T, d = x.shape
     R = src.shape[0]
-    bm = _blocks(R, block_m)
+    tiles = resolve_tiles("scatter_rows", (T, R, d), x.dtype, {"bm": 8},
+                          {"bm": block_m})
+    cm = choose_block(R, tiles["bm"])
+    bm = cm.block
     if weights is None:
         weights = jnp.ones((R,), x.dtype)
+    if cm.padded != R:
+        src = jnp.pad(src, (0, cm.padded - R), constant_values=-1)
+        weights = jnp.pad(weights, (0, cm.padded - R))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
-        grid=(R // bm,),
+        grid=(cm.grid,),
         in_specs=[
             pl.BlockSpec((T, d), lambda i, src, rows: (0, 0)),   # full source
             pl.BlockSpec((bm, 1), lambda i, src, rows: (i, 0)),  # slot weights
         ],
         out_specs=pl.BlockSpec((bm, d), lambda i, src, rows: (i, 0)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_scatter_kernel, bm=bm),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((R, d), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((cm.padded, d), x.dtype),
         interpret=interpret,
     )(src.astype(jnp.int32), jnp.asarray(total_rows, jnp.int32).reshape(1),
-      x, weights.reshape(R, 1))
+      x, weights.reshape(cm.padded, 1))
+    return out[:R]
 
 
 def _gather_kernel(slots_ref, buf_ref, w_ref, o_ref, *, bt: int, K: int):
@@ -115,27 +125,38 @@ def _gather_kernel(slots_ref, buf_ref, w_ref, o_ref, *, bt: int, K: int):
 
 
 def gather_combine(buf: jax.Array, slots: jax.Array,
-                   weights: jax.Array | None = None, *, block_t: int = 8,
+                   weights: jax.Array | None = None, *,
+                   block_t: int | None = None,
                    interpret: bool = False) -> jax.Array:
     """buf: (R, d); slots: (T, K) int32 (-1 = dropped) -> (T, d), each token
-    the weighted sum of its K slot rows (the transpose of scatter_rows)."""
+    the weighted sum of its K slot rows (the transpose of scatter_rows).
+    When the chosen block does not divide T, slots are padded with -1 (dead
+    tokens) and the padded rows sliced off — any block size is legal."""
     R, d = buf.shape
     T, K = slots.shape
-    bt = _blocks(T, block_t)
+    tiles = resolve_tiles("gather_combine", (T, R, d), buf.dtype, {"bt": 8},
+                          {"bt": block_t})
+    ct = choose_block(T, tiles["bt"])
+    bt = ct.block
     if weights is None:
         weights = jnp.ones((T, K), buf.dtype)
+    if ct.padded != T:
+        slots = jnp.pad(slots, ((0, ct.padded - T), (0, 0)),
+                        constant_values=-1)
+        weights = jnp.pad(weights, ((0, ct.padded - T), (0, 0)))
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,
-        grid=(T // bt,),
+        grid=(ct.grid,),
         in_specs=[
             pl.BlockSpec((R, d), lambda i, slots: (0, 0)),       # full buffer
             pl.BlockSpec((bt, K), lambda i, slots: (i, 0)),      # combine wts
         ],
         out_specs=pl.BlockSpec((bt, d), lambda i, slots: (i, 0)),
     )
-    return pl.pallas_call(
+    out = pl.pallas_call(
         functools.partial(_gather_kernel, bt=bt, K=K),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((T, d), buf.dtype),
+        out_shape=jax.ShapeDtypeStruct((ct.padded, d), buf.dtype),
         interpret=interpret,
     )(slots.reshape(-1).astype(jnp.int32), buf, weights.astype(buf.dtype))
+    return out[:T]

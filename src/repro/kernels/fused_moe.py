@@ -1,0 +1,164 @@
+"""Fused persistent MoE expert kernel (docs/DESIGN.md §6, §Fused).
+
+The three-launch hot path (``scatter_rows`` dispatch -> grouped SwiGLU +
+down-proj -> ``gather_combine``) round-trips the ``(R, d)`` dispatch buffer
+through HBM twice per FCDA chunk and pays three kernel launches whose count
+scales with the chunk count MACT picks.  This kernel performs the whole leg
+in ONE launch over the MegaBlocks-style ragged layout:
+
+  grid step (i, k) — row-block i (bm rows, one expert ``b2e[i]``),
+  k-th slice of the d (hidden) contraction:
+
+    1. *dispatch*   gather the block's rows straight from token storage via
+                    the SMEM-prefetched inverted slot map ``src`` (exactly
+                    the dispatch kernel's gather formulation) into a VMEM
+                    scratch tile — the ``(R, d)`` buffer never exists in HBM;
+    2. *SwiGLU*     accumulate both up-projections in fp32 VMEM scratch,
+                    K-innermost as in ``grouped_mlp.py`` (the (bm, f) tiles
+                    stay resident across k steps);
+    3. *down-proj + combine* (epilogue, k == n_k-1)  y = silu(h1)*h3 @ w2,
+                    then scatter-accumulate ``wslot[r] * y[r]`` into the
+                    token-major output block — whose index map is CONSTANT,
+                    so the fp32 ``(T, d)`` accumulator stays resident in
+                    VMEM for the whole grid: a persistent kernel, written
+                    back to HBM once at the end.
+
+Row-blocks past ``total_rows`` are predicated off entirely (prefix layout,
+as in ``ragged_mlp.py``); empty slots inside live blocks carry ``src = -1``
+and are masked per row.  Accumulation into a token's output row happens in
+ascending buffer-row order — ``ref.fused_moe_ref`` mirrors that exact order
+so interpret-mode parity is bit-for-bit under exact arithmetic.
+
+Tile sizes resolve through the measured autotuner cache
+(kernels/autotune.py) with the padded ``choose_block`` fallback, so any
+``block_k`` is legal (the d contraction is zero-padded — exact).  The
+backward pass is NOT this kernel: ``kernels/ops.py::moe_ffn`` wires the
+transpose-symmetric custom VJP (combine-bwd = dispatch kernel, dispatch-bwd
+= combine kernel, FFN recomputed with the ragged kernels), so no ``(R, ·)``
+residual survives autodiff either.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.tiling import choose_block, resolve_tiles
+
+
+def _fused_kernel(src_ref, b2e_ref, rows_ref, x_ref, w1_ref, w3_ref, w2_ref,
+                  wslot_ref, o_ref, xs, acc1, acc3, *, bm: int, n_k: int):
+    i = pl.program_id(0)
+    k = pl.program_id(1)
+    base = i * bm
+    live = base < rows_ref[0]
+
+    @pl.when((i == 0) & (k == 0))
+    def _zero_out():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    @pl.when(k == 0)
+    def _init_acc():
+        acc1[...] = jnp.zeros_like(acc1)
+        acc3[...] = jnp.zeros_like(acc3)
+
+    @pl.when(live)
+    def _dispatch_and_up():
+        # dispatch leg: gather this block's rows from token storage via the
+        # inverted slot map (the scatter expressed as a per-output-row gather)
+        def gather(r, _):
+            s = src_ref[base + r]
+            row = x_ref[pl.ds(jnp.maximum(s, 0), 1), :]
+            xs[pl.ds(r, 1), :] = jnp.where(s >= 0, row, 0).astype(xs.dtype)
+            return 0
+
+        jax.lax.fori_loop(0, bm, gather, 0)
+        # up-projections: fp32 accumulate, K-innermost (grouped_mlp.py)
+        acc1[...] += jnp.dot(xs[...], w1_ref[0],
+                             preferred_element_type=jnp.float32)
+        acc3[...] += jnp.dot(xs[...], w3_ref[0],
+                             preferred_element_type=jnp.float32)
+
+    @pl.when(live & (k == n_k - 1))
+    def _down_and_combine():
+        h = (jax.nn.silu(acc1[...]) * acc3[...]).astype(xs.dtype)
+        y = jnp.dot(h, w2_ref[0], preferred_element_type=jnp.float32)
+
+        # combine leg: weighted scatter-accumulate into the persistent
+        # token-major fp32 block (ascending row order — the parity contract)
+        def scatter(r, _):
+            s = src_ref[base + r]
+            w = wslot_ref[pl.ds(r, 1), :].astype(jnp.float32)      # (1, 1)
+            yr = jax.lax.dynamic_slice_in_dim(y, r, 1, axis=0)
+            contrib = jnp.where(s >= 0, yr * w, 0.0)
+            t = jnp.maximum(s, 0)
+            o_ref[pl.ds(t, 1), :] += contrib
+            return 0
+
+        jax.lax.fori_loop(0, bm, scatter, 0)
+
+
+def fused_moe(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+              src: jax.Array, wslot: jax.Array | None, total_rows,
+              block_to_expert: jax.Array, *, block_k: int | None = None,
+              interpret: bool = False) -> jax.Array:
+    """x: (T, d) tokens; src: (R,) inverted slot map (-1 = empty slot);
+    wslot: (R,) per-slot combine weight (None = 1); block_to_expert:
+    (R // bm,) — the ragged layout's block -> expert map (R must be
+    bm-aligned, as produced by ``recv_ragged_plan``/``make_ragged_plan``).
+
+    Returns (T, d): each token the weighted sum of its expert-FFN outputs,
+    with the dispatch buffer, SwiGLU intermediates and FFN output all kept
+    in VMEM — nothing but the (T, d) result touches HBM on this pass.
+    """
+    T, d = x.shape
+    E, _, f = w1.shape
+    R = src.shape[0]
+    nb = block_to_expert.shape[0]
+    if R % nb:
+        raise ValueError(f"rows R={R} not a multiple of {nb} blocks")
+    bm = R // nb
+
+    tiles = resolve_tiles("fused_moe", (T, d, f, E, bm), x.dtype,
+                          {"bk": 512}, {"bk": block_k})
+    ck = choose_block(d, tiles["bk"])
+    if ck.padded != d:                      # pad the contraction dim: exact
+        x = jnp.pad(x, ((0, 0), (0, ck.padded - d)))
+        w1 = jnp.pad(w1, ((0, 0), (0, ck.padded - d), (0, 0)))
+        w3 = jnp.pad(w3, ((0, 0), (0, ck.padded - d), (0, 0)))
+    bk, n_k = ck.block, ck.grid
+    if wslot is None:
+        wslot = jnp.ones((R,), x.dtype)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=3,
+        grid=(nb, n_k),
+        in_specs=[
+            pl.BlockSpec((T, bk), lambda i, k, src, b2e, rows: (0, k)),
+            pl.BlockSpec((1, bk, f), lambda i, k, src, b2e, rows: (b2e[i], k, 0)),
+            pl.BlockSpec((1, bk, f), lambda i, k, src, b2e, rows: (b2e[i], k, 0)),
+            pl.BlockSpec((1, f, d), lambda i, k, src, b2e, rows: (b2e[i], 0, 0)),
+            pl.BlockSpec((bm, 1), lambda i, k, src, b2e, rows: (i, 0)),
+        ],
+        # constant index map: the (T, d) fp32 accumulator is resident across
+        # the entire grid — the "persistent" in persistent kernel
+        out_specs=pl.BlockSpec((T, d), lambda i, k, src, b2e, rows: (0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bm, bk), x.dtype),          # gathered row tile
+            pltpu.VMEM((bm, f), jnp.float32),       # up-proj accumulators
+            pltpu.VMEM((bm, f), jnp.float32),
+        ],
+    )
+    out = pl.pallas_call(
+        functools.partial(_fused_kernel, bm=bm, n_k=n_k),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((T, d), jnp.float32),
+        interpret=interpret,
+    )(src.astype(jnp.int32), block_to_expert.astype(jnp.int32),
+      jnp.asarray(total_rows, jnp.int32).reshape(1),
+      x, w1, w3, w2, wslot.reshape(R, 1))
+    return out.astype(x.dtype)

@@ -236,3 +236,125 @@ def ragged_expert_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array,
     return _ragged_ffn_kernel(x, w1, w3, w2,
                               block_to_expert.astype(jnp.int32), rows,
                               block_m, interpret)
+
+
+# ---------------------------------------------------------------------------
+# fully fused MoE leg: dispatch -> SwiGLU -> down-proj -> combine in ONE
+# kernel launch (kernels/fused_moe.py) — the (R, d) dispatch buffer never
+# exists in HBM on the forward pass.  The custom VJP composes the transpose
+# symmetry with chunk-recompute: combine-backward IS the dispatch kernel
+# (scatter token grads, combine weight riding along), dispatch-backward IS
+# the combine kernel (gather per-token sums), and the FFN interior is
+# recomputed with the ragged kernels — so the buffer exists only transiently
+# inside the backward, exactly as the three-launch path's VJP already does,
+# and no (R, ·) residual is saved.
+# ---------------------------------------------------------------------------
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(9, 10, 11, 12))
+def _fused_moe_k(x, w1, w3, w2, src, wslot, slots, b2e, rows,
+                 has_weights, block_m, block_k, interpret):
+    from repro.kernels.fused_moe import fused_moe
+    return fused_moe(x, w1, w3, w2, src, wslot, rows, b2e,
+                     block_k=block_k, interpret=interpret)
+
+
+def _fused_moe_fwd(x, w1, w3, w2, src, wslot, slots, b2e, rows,
+                   has_weights, block_m, block_k, interpret):
+    y = _fused_moe_k(x, w1, w3, w2, src, wslot, slots, b2e, rows,
+                     has_weights, block_m, block_k, interpret)
+    # residuals: primal inputs + int32 maps only — no (R, ·) intermediate
+    return y, (x, w1, w3, w2, src, wslot, slots, b2e, rows)
+
+
+def _fused_moe_bwd(has_weights, block_m, block_k, interpret, res, gy):
+    x, w1, w3, w2, src, wslot, slots, b2e, rows = res
+    E = w1.shape[0]
+    # combine-bwd = dispatch kernel: dL/dy[r] = wslot[r] * gy[token(r)]
+    g_buf = dp.scatter_rows(gy, src, rows, wslot, block_m=block_m,
+                            interpret=interpret)
+    # dispatch recompute — the buffer exists only inside this backward
+    buf = dp.scatter_rows(x, src, rows, block_m=block_m, interpret=interpret)
+    mm = functools.partial(ragged_matmul, block_to_expert=b2e,
+                           total_rows=rows, block_m=block_m,
+                           interpret=interpret)
+    h1 = mm(buf, w1).astype(jnp.float32)
+    h3 = mm(buf, w3).astype(jnp.float32)
+    s = jax.nn.sigmoid(h1)
+    silu_h1 = h1 * s
+    a = (silu_h1 * h3).astype(x.dtype)
+    da = mm(g_buf, jnp.swapaxes(w2, 1, 2)).astype(jnp.float32)
+    dh3 = (da * silu_h1).astype(x.dtype)
+    dh1 = (da * h3 * (s + silu_h1 * (1 - s))).astype(x.dtype)
+    dbuf = (mm(dh1, jnp.swapaxes(w1, 1, 2))
+            + mm(dh3, jnp.swapaxes(w3, 1, 2))).astype(x.dtype)
+    # dispatch-bwd = combine kernel: dx[t] = sum_k dbuf[slot[t, k]]
+    dx = dp.gather_combine(dbuf, slots, None, interpret=interpret)
+    dw1 = _segment_outer(buf, dh1, b2e, E).astype(w1.dtype)
+    dw3 = _segment_outer(buf, dh3, b2e, E).astype(w3.dtype)
+    dw2 = _segment_outer(a, g_buf, b2e, E).astype(w2.dtype)
+    if has_weights:
+        # d wslot[r] = <gy[token(r)], y[r]> — needs the FFN output, one
+        # extra ragged matmul; skipped entirely when the combine is unweighted
+        # (the EP local leg, where the router weight is applied later).
+        # Evaluated in the SAME (T, K)-shaped einsum as _combine_bwd and then
+        # permuted to rows, so the (T, K) router grad the outer transpose
+        # reassembles is bit-identical to the three-launch path's.
+        from repro.core.dispatch import invert_slots
+        y_buf = mm(a, w2)                                  # == combine's buf
+        rows_y = jnp.take(y_buf, jnp.maximum(slots, 0), axis=0)   # (T, K, d)
+        dwtk = jnp.einsum("td,tkd->tk", gy.astype(jnp.float32),
+                          rows_y.astype(jnp.float32))
+        dwtk = jnp.where(slots >= 0, dwtk, 0.0).astype(wslot.dtype)
+        pos = invert_slots(slots, wslot.shape[0])
+        d_wslot = jnp.where(
+            pos >= 0, jnp.take(dwtk.reshape(-1), jnp.maximum(pos, 0)),
+            jnp.zeros((), wslot.dtype))
+    else:
+        d_wslot = jnp.zeros_like(wslot)
+    return (dx, dw1, dw3, dw2, _f0(src), d_wslot, _f0(slots), _f0(b2e),
+            _f0(rows))
+
+
+_fused_moe_k.defvjp(_fused_moe_fwd, _fused_moe_bwd)
+
+
+def moe_ffn(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+            slots: jax.Array, block_to_expert: jax.Array, total_rows,
+            weights: jax.Array | None = None, *, block_m: int = 128,
+            block_k: int | None = None, use_pallas: bool = False,
+            interpret: bool = False) -> jax.Array:
+    """The whole per-chunk expert leg in one launch: x (T, d) + slot map
+    (T, K) -> (T, d) weighted expert-FFN combine, over the MegaBlocks-style
+    flat layout described by ``block_to_expert``/``total_rows`` (buffer size
+    R = len(block_to_expert) * block_m).
+
+    Pallas path: kernels/fused_moe.py (persistent single launch; the (R, d)
+    dispatch buffer never touches HBM on forward) with the transpose-
+    symmetric chunk-recompute VJP above.  jnp path: the composed reference
+    (scatter -> ragged FFN ref -> gather), autodiff'd as-is."""
+    R = block_to_expert.shape[0] * block_m
+    if not use_pallas:
+        from repro.core.dispatch import scatter_rows_flat, gather_rows_flat
+        buf = scatter_rows_flat(x, slots, R)
+        y = ref.ragged_expert_ffn_ref(buf, w1, w3, w2, block_to_expert,
+                                      total_rows)
+        return gather_rows_flat(y, slots, weights)
+    from repro.core.dispatch import invert_slots
+    T, K = slots.shape
+    # derive the row-side maps OUTSIDE the custom_vjp: wslot is a
+    # differentiable gather of the router weights, so its cotangent
+    # transposes back to (T, K) automatically
+    pos = invert_slots(slots, R)
+    src = jnp.where(pos >= 0, pos // K, -1)
+    if weights is None:
+        w_flat = jnp.ones((T * K,), x.dtype)
+    else:
+        w_flat = weights.reshape(-1)
+    wslot = jnp.where(pos >= 0, jnp.take(w_flat, jnp.maximum(pos, 0)),
+                      jnp.zeros((), x.dtype))
+    return _fused_moe_k(x, w1, w3, w2, src, wslot,
+                        slots.astype(jnp.int32),
+                        block_to_expert.astype(jnp.int32),
+                        jnp.asarray(total_rows, jnp.int32),
+                        weights is not None, block_m, block_k, interpret)

@@ -14,6 +14,12 @@ exactly one expert:
            (predicated off), so issued MXU work scales with the ACTUAL load,
            not the worst case.
 
+``block_m`` is the layout's row-block size (set by the dispatch plan, R is
+always a multiple); the N/K tiles resolve through the autotuner cache
+(docs/DESIGN.md §Autotune) and the operands are zero-padded to the chosen
+block multiples — exact under contraction, padded output columns sliced off
+— so any tile size is legal.
+
 Validated in interpret mode against ref.py; on CPU/dry-run executions the
 MoE layer keeps the einsum path (Pallas does not lower to the CPU backend).
 """
@@ -27,7 +33,25 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
-from repro.kernels.tiling import pick_block as _blocks
+from repro.kernels.tiling import choose_block, resolve_tiles
+
+_DEFAULTS = {"bn": 128, "bk": 512}
+
+
+def _padded_nk(op, x, w_list, block_n, block_k):
+    """Resolve (bn, bk) and zero-pad x's K dim and the weights' K/N dims."""
+    R, K = x.shape
+    E, _, N = w_list[0].shape
+    tiles = resolve_tiles(op, (R, K, N, E), x.dtype, _DEFAULTS,
+                          {"bn": block_n, "bk": block_k})
+    cn = choose_block(N, tiles["bn"])
+    ck = choose_block(K, tiles["bk"])
+    if ck.padded != K:
+        x = jnp.pad(x, ((0, 0), (0, ck.padded - K)))
+    if (ck.padded, cn.padded) != (K, N):
+        w_list = [jnp.pad(w, ((0, 0), (0, ck.padded - K), (0, cn.padded - N)))
+                  for w in w_list]
+    return x, w_list, cn, ck
 
 
 def _ragged_kernel(b2e_ref, rows_ref, x_ref, w_ref, o_ref, acc, *, n_k: int):
@@ -74,16 +98,16 @@ def _ragged_swiglu_kernel(b2e_ref, rows_ref, x_ref, w1_ref, w3_ref, o_ref,
 
 def ragged_matmul(x: jax.Array, w: jax.Array, block_to_expert: jax.Array,
                   total_rows: jax.Array, *, block_m: int = 128,
-                  block_n: int = 128, block_k: int = 512,
+                  block_n: int | None = None, block_k: int | None = None,
                   interpret: bool = False) -> jax.Array:
     """x: (R, K) bm-aligned expert-grouped rows; w: (E, K, N) -> (R, N)."""
     R, K = x.shape
     E, _, N = w.shape
     bm = block_m
     assert R % bm == 0 and block_to_expert.shape == (R // bm,)
-    bn, bk = _blocks(N, block_n), _blocks(K, block_k)
-    n_k = K // bk
-    grid = (R // bm, N // bn, n_k)
+    xp, (wp,), cn, ck = _padded_nk("ragged_matmul", x, [w], block_n, block_k)
+    bn, bk = cn.block, ck.block
+    grid = (R // bm, cn.grid, ck.grid)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -94,27 +118,30 @@ def ragged_matmul(x: jax.Array, w: jax.Array, block_to_expert: jax.Array,
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k, b2e, rows: (i, j)),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
     )
-    return pl.pallas_call(
-        functools.partial(_ragged_kernel, n_k=n_k),
+    out = pl.pallas_call(
+        functools.partial(_ragged_kernel, n_k=ck.grid),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((R, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, cn.padded), x.dtype),
         interpret=interpret,
     )(block_to_expert.astype(jnp.int32),
-      jnp.asarray(total_rows, jnp.int32).reshape(1), x, w)
+      jnp.asarray(total_rows, jnp.int32).reshape(1), xp, wp)
+    return out[:, :N]
 
 
 def ragged_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
                   block_to_expert: jax.Array, total_rows: jax.Array, *,
-                  block_m: int = 128, block_n: int = 128, block_k: int = 512,
+                  block_m: int = 128, block_n: int | None = None,
+                  block_k: int | None = None,
                   interpret: bool = False) -> jax.Array:
     """Fused silu(x@w1)*(x@w3) over the ragged layout: (R, K) -> (R, N)."""
     R, K = x.shape
     E, _, N = w1.shape
     bm = block_m
     assert R % bm == 0 and block_to_expert.shape == (R // bm,)
-    bn, bk = _blocks(N, block_n), _blocks(K, block_k)
-    n_k = K // bk
-    grid = (R // bm, N // bn, n_k)
+    xp, (w1p, w3p), cn, ck = _padded_nk("ragged_swiglu", x, [w1, w3],
+                                        block_n, block_k)
+    bn, bk = cn.block, ck.block
+    grid = (R // bm, cn.grid, ck.grid)
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,
         grid=grid,
@@ -127,10 +154,11 @@ def ragged_swiglu(x: jax.Array, w1: jax.Array, w3: jax.Array,
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32),
                         pltpu.VMEM((bm, bn), jnp.float32)],
     )
-    return pl.pallas_call(
-        functools.partial(_ragged_swiglu_kernel, n_k=n_k),
+    out = pl.pallas_call(
+        functools.partial(_ragged_swiglu_kernel, n_k=ck.grid),
         grid_spec=grid_spec,
-        out_shape=jax.ShapeDtypeStruct((R, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((R, cn.padded), x.dtype),
         interpret=interpret,
     )(block_to_expert.astype(jnp.int32),
-      jnp.asarray(total_rows, jnp.int32).reshape(1), x, w1, w3)
+      jnp.asarray(total_rows, jnp.int32).reshape(1), xp, w1p, w3p)
+    return out[:, :N]

@@ -90,6 +90,41 @@ def scatter_rows_ref(x: jax.Array, src: jax.Array, total_rows,
     return jnp.where(live[:, None], rows, 0.0).astype(x.dtype)
 
 
+def fused_moe_ref(x: jax.Array, w1: jax.Array, w3: jax.Array, w2: jax.Array,
+                  src: jax.Array, slots: jax.Array, block_to_expert: jax.Array,
+                  total_rows, weights: jax.Array | None = None) -> jax.Array:
+    """Oracle for kernels/fused_moe.py: dispatch -> SwiGLU -> down-proj ->
+    weighted combine, mirroring the fused kernel's arithmetic exactly.
+
+    The fused kernel scatters expert outputs into each token's row in
+    *ascending buffer-row* order (it walks the ragged layout front to back),
+    so this ref sorts each token's slots ascending before the fp32
+    slot-by-slot accumulation; h is cast to the working dtype before the
+    down-proj (the kernel's epilogue cast) while y stays fp32 through the
+    combine.  Under exact arithmetic (integer-valued inputs, power-of-two
+    weights) parity with the kernel is bit-for-bit."""
+    T, _ = x.shape
+    R = src.shape[0]
+    buf = scatter_rows_ref(x, src, total_rows)                    # (R, d)
+    h = ragged_swiglu_ref(buf, w1, w3, block_to_expert, total_rows)
+    hb = _blocked(h, block_to_expert)
+    wb = jnp.take(w2, block_to_expert, axis=0)
+    y = jnp.einsum("bmk,bkn->bmn", hb, wb,
+                   preferred_element_type=jnp.float32).reshape(R, -1)
+
+    order = jnp.argsort(jnp.where(slots < 0, R, slots), axis=1)
+    ss = jnp.take_along_axis(slots, order, axis=1)
+    ww = None if weights is None else jnp.take_along_axis(weights, order, axis=1)
+    acc = jnp.zeros((T, y.shape[1]), jnp.float32)
+    for k in range(ss.shape[1]):
+        s = ss[:, k]
+        row = jnp.take(y, jnp.maximum(s, 0), axis=0)
+        if ww is not None:
+            row = row * ww[:, k, None].astype(jnp.float32)
+        acc = acc + jnp.where((s >= 0)[:, None], row, 0.0)
+    return acc.astype(x.dtype)
+
+
 def gather_combine_ref(buf: jax.Array, slots: jax.Array,
                        weights: jax.Array | None = None) -> jax.Array:
     """buf: (R, d), slots: (T, K) (-1 = dropped) -> (T, d) weighted K-sum.

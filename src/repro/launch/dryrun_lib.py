@@ -119,6 +119,7 @@ def build_context(cfg: ModelConfig, shape: InputShape, mesh: Mesh, *,
         use_pallas=use_pallas or bool(flags.get("pallas_interpret")),
         moe_strategy=strategy,
         moe_ragged=bool(flags.get("moe_ragged")),
+        moe_fused=bool(flags.get("moe_fused")),
         pallas_interpret=bool(flags.get("pallas_interpret")),
         act_pspec=NamedSharding(
             mesh, P(shd.guarded(mesh, B, shd.batch_axes(mesh)), seq_ax, None)),

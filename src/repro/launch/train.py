@@ -48,6 +48,10 @@ def main() -> None:
     ap.add_argument("--remat", default=None, choices=["none", "full", "memfine"])
     ap.add_argument("--mesh", default="local", choices=["local", "prod", "prod-mp"])
     ap.add_argument("--use-pallas", action="store_true")
+    ap.add_argument("--fused", action="store_true",
+                    help="single-launch fused MoE expert leg over the ragged "
+                         "layout (kernels/fused_moe.py); MACT plans with the "
+                         "reduced Eq. 2 term")
     ap.add_argument("--checkpoint-dir", default=None)
     ap.add_argument("--checkpoint-every", type=int, default=0)
     ap.add_argument("--resume", action="store_true",
@@ -82,7 +86,7 @@ def main() -> None:
     depth = 1 if args.no_pipeline else args.pipeline_depth
     ctx = DistContext(mesh=mesh, moe_chunks=args.chunks,
                       pipeline_chunks=depth if args.no_mact else 1,
-                      use_pallas=args.use_pallas)
+                      use_pallas=args.use_pallas, moe_fused=args.fused)
     trainer = Trainer(cfg, ctx, seq_len=args.seq_len,
                       global_batch=args.global_batch, lr=args.lr,
                       use_mact=not args.no_mact,

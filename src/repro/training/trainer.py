@@ -106,7 +106,7 @@ class Trainer:
                                    b=max(1, self.global_batch // data))
         self.mact = MACTController(
             self.cfg, self.par, self.hw, self.seq_len, bins=self.mact_bins,
-            static_override=self.static_override)
+            static_override=self.static_override, fused=self.ctx.moe_fused)
         self.data = SyntheticLMData(self.cfg, self.seq_len, self.global_batch,
                                     self.seed)
         self._steps: OrderedDict[tuple, object] = OrderedDict()

@@ -102,6 +102,41 @@ def test_pick_block_divides():
             assert dim % b == 0 and 1 <= b <= max(pref, 1)
 
 
+def test_choose_block_pads_primes():
+    """Regression: pick_block degenerates to 1-wide tiles on prime dims past
+    the preferred block; choose_block keeps the full block and pads."""
+    from repro.kernels.tiling import choose_block
+    for dim in (131, 257, 1009):
+        assert _pick_block(dim, 128) == 1          # the old degenerate pick
+        c = choose_block(dim, 128)
+        assert c.block == 128 and c.padded % 128 == 0 and c.padded >= dim
+        assert c.grid == c.padded // 128
+    # aligned dims stay unpadded (zero overhead on the common case)
+    assert choose_block(256, 128) == (128, 256)
+    assert choose_block(24, 128) == (24, 24)
+    with pytest.raises(ValueError):
+        choose_block(0, 128)
+
+
+@pytest.mark.parametrize("m,k,n", [(13, 29, 257), (16, 131, 37)])
+def test_grouped_kernels_prime_dims(m, k, n):
+    """Prime/odd M, K, N: the padded-tile path (explicit small blocks force
+    padding on every dim) still matches the reference exactly."""
+    key = jax.random.PRNGKey(m + k + n)
+    k1, k2, k3 = jax.random.split(key, 3)
+    x = _rand(k1, (2, m, k), jnp.float32)
+    w1 = _rand(k2, (2, k, n), jnp.float32, 0.1)
+    w3 = _rand(k3, (2, k, n), jnp.float32, 0.1)
+    out = grouped_matmul(x, w1, block_m=8, block_n=8, block_k=8,
+                         interpret=True)
+    np.testing.assert_allclose(out, ref.grouped_matmul_ref(x, w1),
+                               rtol=1e-5, atol=1e-5)
+    out = grouped_swiglu(x, w1, w3, block_m=8, block_n=8, block_k=8,
+                         interpret=True)
+    np.testing.assert_allclose(out, ref.grouped_swiglu_ref(x, w1, w3),
+                               rtol=1e-5, atol=1e-5)
+
+
 # ---------------------------------------------------------------------------
 # ragged (MegaBlocks-style) kernels
 # ---------------------------------------------------------------------------
@@ -142,6 +177,22 @@ def test_ragged_swiglu_matches_ref():
     expect = ref.ragged_swiglu_ref(buf, w1, w3, plan.block_to_expert,
                                    plan.total_rows)
     np.testing.assert_allclose(out, expect, rtol=1e-5, atol=1e-5)
+
+
+def test_ragged_kernels_prime_dims():
+    """Prime hidden/ffn dims on the ragged layout: K/N pad, R stays plan-
+    aligned, results match the reference."""
+    plan, buf, w1, w3, _, _, _ = _ragged_setup(d=17, f=37, seed=4)
+    out = ragged_matmul(buf, w1, plan.block_to_expert, plan.total_rows,
+                        block_m=8, block_n=8, block_k=8, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.ragged_matmul_ref(buf, w1, plan.block_to_expert,
+                                   plan.total_rows), rtol=1e-5, atol=1e-5)
+    out = ragged_swiglu(buf, w1, w3, plan.block_to_expert, plan.total_rows,
+                        block_m=8, block_n=8, block_k=8, interpret=True)
+    np.testing.assert_allclose(
+        out, ref.ragged_swiglu_ref(buf, w1, w3, plan.block_to_expert,
+                                   plan.total_rows), rtol=1e-5, atol=1e-5)
 
 
 def test_ragged_ffn_equals_per_expert_path():
