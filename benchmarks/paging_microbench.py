@@ -1,0 +1,168 @@
+"""Paged vs monolithic serving cache under an equal memory budget.
+
+The monolithic slot map reserves every resident's FULL ``cache_len`` ring
+up front, so a budget that fits k max-length caches admits exactly k
+requests no matter how short they are.  The paged scheduler
+(docs/DESIGN.md §Paging) charges allocated pages plus each resident's
+worst-case tail, so short requests on a long ``cache_len`` admit at far
+higher concurrency — the acceptance target for this bench is >= 1.3x
+admitted concurrency on the short-request trace, at the same budget.
+
+Second axis: the prefix-cache sweep.  Requests share a system-prompt stem
+of varying length; the trie skips the shared chunks on every hit, so
+prefill chunk count (and time-to-first-token work) drops with stem length
+while outputs stay bit-identical (pinned by tests/test_paging.py).
+
+Emits CSV lines per repo convention and writes ``BENCH_paging.json``
+(skipped in tiny/CI mode: SERVING_BENCH_TINY=1 or PAGING_BENCH_TINY=1).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARCH = "llama3.2-3b"
+SLOTS = 8
+PAGE = 8
+PREFILL_CHUNK = 16
+CACHE_LEN = 160                 # long budget line; requests use ~32 tokens
+PROMPT = 16
+GEN = 16
+REQUESTS = 16
+TINY_REQUESTS = 6
+MONO_FIT = 3                    # budget sized to admit ~3 monolithic caches
+STEMS = (0, 16, 32)             # prefix-sweep shared stem lengths
+SWEEP_PROMPT = 40               # total prompt length in the prefix sweep
+
+
+def _trace(rng, n, vocab, stem_len=0, stem=None, prompt=PROMPT):
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    out = []
+    for i in range(n):
+        tail = rng.integers(0, vocab, prompt - stem_len).astype(np.int32)
+        toks = tail if stem_len == 0 else np.concatenate([stem[:stem_len],
+                                                          tail])
+        out.append(Request(rid=i, tokens=toks, max_new_tokens=GEN,
+                           arrival=0.0))
+    return out
+
+
+def _budget(cfg):
+    """Midpoint between MONO_FIT and MONO_FIT+1 monolithic residents."""
+    import dataclasses
+
+    from repro.configs.base import GPU_64G
+    from repro.core import memory_model as mm
+    kw = dict(cache_len=CACHE_LEN, decode_tokens=SLOTS,
+              prefill_tokens=PREFILL_CHUNK, dtype_bytes=2)
+    lo = mm.serving_peak_bytes(cfg, requests=MONO_FIT, **kw)
+    hi = mm.serving_peak_bytes(cfg, requests=MONO_FIT + 1, **kw)
+    return dataclasses.replace(GPU_64G, hbm_bytes=(lo + hi) / 2, alpha=1.0)
+
+
+def run() -> list[str]:
+    import time
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.moe import DistContext
+    from repro.models import transformer
+    from repro.serving.paged_scheduler import PagedScheduler
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+
+    tiny = bool(os.environ.get("SERVING_BENCH_TINY")
+                or os.environ.get("PAGING_BENCH_TINY"))
+    n_requests = TINY_REQUESTS if tiny else REQUESTS
+    ctx = DistContext()
+    cfg = get_config(ARCH).reduced()
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    hw = _budget(cfg)
+    lines, out = [], {"arch": ARCH, "slots": SLOTS, "page": PAGE,
+                      "cache_len": CACHE_LEN, "requests": n_requests}
+
+    # -- admitted concurrency at equal budget -------------------------------
+    mono = ContinuousBatchingScheduler(
+        params, cfg, ctx,
+        ServeConfig(max_slots=SLOTS, cache_len=CACHE_LEN,
+                    prefill_chunk=PREFILL_CHUNK, hw=hw))
+    paged = PagedScheduler(
+        params, cfg, ctx,
+        ServeConfig(max_slots=SLOTS, cache_len=CACHE_LEN,
+                    prefill_chunk=PREFILL_CHUNK, hw=hw, page_size=PAGE))
+    for sched in (mono, paged):          # warm compiles, then reset
+        sched.run(_trace(np.random.default_rng(1), 3, cfg.vocab_size))
+        sched.reset()
+    mm_ = mono.run(_trace(np.random.default_rng(0), n_requests,
+                          cfg.vocab_size))
+    pm = paged.run(_trace(np.random.default_rng(0), n_requests,
+                          cfg.vocab_size))
+    conc = pm["max_occupancy"] / max(mm_["max_occupancy"], 1)
+    row = {
+        "mono_occupancy": mm_["max_occupancy"],
+        "paged_occupancy": pm["max_occupancy"],
+        "concurrency_x": round(conc, 2),
+        "target_1_3x_met": conc >= 1.3,
+        "mono_tok_s": round(mm_["tok_per_s"], 2),
+        "paged_tok_s": round(pm["tok_per_s"], 2),
+        "mono_peak_gb": round(mm_["modeled_peak_bytes"] / 1e9, 4),
+        "paged_peak_gb": round(pm["modeled_peak_bytes"] / 1e9, 4),
+        "page_hwm_gb": round(pm["page_hwm_bytes"] / 1e9, 4),
+        "budget_gb": round(pm["budget_bytes"] / 1e9, 4),
+        "within_budget": (pm["modeled_peak_bytes"] <= pm["budget_bytes"]
+                          and mm_["modeled_peak_bytes"]
+                          <= mm_["budget_bytes"]),
+    }
+    out["concurrency"] = row
+    lines.append(
+        f"paging,arch={ARCH},mono_occ={row['mono_occupancy']},"
+        f"paged_occ={row['paged_occupancy']},"
+        f"concurrency_x={row['concurrency_x']},"
+        f"target_1_3x_met={row['target_1_3x_met']},"
+        f"within_budget={row['within_budget']}")
+
+    # -- prefix-hit sweep ----------------------------------------------------
+    sweep = []
+    rngs = np.random.default_rng(7)
+    stem = rngs.integers(0, cfg.vocab_size, max(STEMS)).astype(np.int32)
+    for stem_len in STEMS:
+        sched = PagedScheduler(
+            params, cfg, ctx,
+            ServeConfig(max_slots=4, cache_len=CACHE_LEN,
+                        prefill_chunk=PREFILL_CHUNK, page_size=PAGE,
+                        prefix_cache=True))
+        sched.run(_trace(np.random.default_rng(2), 3, cfg.vocab_size,
+                         stem_len, stem, prompt=SWEEP_PROMPT))
+        sched.reset()
+        t0 = time.perf_counter()
+        m = sched.run(_trace(np.random.default_rng(3), n_requests,
+                             cfg.vocab_size, stem_len, stem,
+                             prompt=SWEEP_PROMPT))
+        dt = time.perf_counter() - t0
+        sweep.append({
+            "stem": stem_len,
+            "hit_rate": round(m["prefix_hit_rate"], 3),
+            "tokens_reused": m["prefix_tokens_reused"],
+            "prefill_chunks": m["prefill_chunks"],
+            "tok_s": round(m["generated_tokens"] / dt, 2),
+        })
+        lines.append(
+            f"paging_prefix,stem={stem_len},"
+            f"hit_rate={sweep[-1]['hit_rate']},"
+            f"tokens_reused={sweep[-1]['tokens_reused']},"
+            f"prefill_chunks={sweep[-1]['prefill_chunks']}")
+    out["prefix_sweep"] = sweep
+
+    if not tiny:
+        with open("BENCH_paging.json", "w") as f:
+            json.dump(out, f, indent=2)
+        lines.append("paging,written=BENCH_paging.json")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

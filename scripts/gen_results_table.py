@@ -131,6 +131,36 @@ def serving_table() -> list[str]:
     return out
 
 
+def paging_table() -> list[str]:
+    d = _load("BENCH_paging.json")
+    if not d:
+        return ["(BENCH_paging.json missing — run `benchmarks.run paging`)"]
+    c = d["concurrency"]
+    out = ["| scheme | admitted concurrency | tok/s | modeled peak (GB) "
+           "| page HWM (GB) |",
+           "|---|---|---|---|---|",
+           f"| monolithic slot map | {c['mono_occupancy']} "
+           f"| {c['mono_tok_s']:.0f} | {c['mono_peak_gb']:.3f} | — |",
+           f"| paged (page={d['page']}) | **{c['paged_occupancy']}** "
+           f"| {c['paged_tok_s']:.0f} | {c['paged_peak_gb']:.3f} "
+           f"| {c['page_hwm_gb']:.4f} |",
+           "",
+           f"{c['concurrency_x']:.2f}x admitted concurrency at an equal "
+           f"budget of {c['budget_gb']:.3f} GB "
+           f"(target >= 1.3x: {'met' if c['target_1_3x_met'] else 'NOT met'}; "
+           f"both within budget: {c['within_budget']}).  "
+           f"{d['requests']} requests on {d['arch']}, cache_len "
+           f"{d['cache_len']}.",
+           "",
+           "| shared stem | prefix hit rate | tokens reused "
+           "| prefill chunks |",
+           "|---|---|---|---|"]
+    for r in d["prefix_sweep"]:
+        out.append(f"| {r['stem']} | {r['hit_rate']:.2f} "
+                   f"| {r['tokens_reused']} | {r['prefill_chunks']} |")
+    return out
+
+
 def chaos_table() -> list[str]:
     d = _load("BENCH_chaos.json")
     if not d:
@@ -247,6 +277,8 @@ def main() -> None:
     print("\n".join(adaptive_table()))
     print("\n### Continuous-batching serving (mixed-length trace, CPU)\n")
     print("\n".join(serving_table()))
+    print("\n### Paged KV cache (vs monolithic slot map, CPU)\n")
+    print("\n".join(paging_table()))
     print("\n### Fault tolerance (chaos harness, injected faults)\n")
     print("\n".join(chaos_table()))
 

@@ -343,9 +343,17 @@ def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
     """Modeled peak serving memory with ``requests`` admitted requests:
     weights + per-request caches + the worse of the decode wave and the
     interleaved prefill chunk (they never run concurrently — the scheduler
-    alternates them at step boundaries)."""
+    alternates them at step boundaries).
+
+    The decode wave runs one token per *occupied* slot, so its activation
+    term is clamped to ``requests``: an earlier revision charged the
+    dropless s' = e_n * decode_tokens at the full slot-map width even for
+    near-empty pools, overstating the decode term past the prefill chunk's
+    (the true per-wave max at low occupancy — regression-pinned in
+    tests/test_paging.py)."""
     dims = LayerDims.from_config(cfg)
-    act = max(serve_act_bytes(dims, decode_tokens, cfg, dtype_bytes),
+    act = max(serve_act_bytes(dims, min(decode_tokens, requests), cfg,
+                              dtype_bytes),
               serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
     return (serve_weight_bytes(cfg, weight_bytes)
             + requests * decode_cache_bytes(cfg, cache_len, dtype_bytes)
@@ -355,3 +363,26 @@ def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
 def serving_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:
     """Eq. (3) for serving: admit only when the modeled peak fits."""
     return serving_peak_bytes(cfg, **kw) <= hw.alpha * hw.hbm_bytes
+
+
+def serving_paged_peak_bytes(cfg: ModelConfig, *, page_bytes: float,
+                             decode_tokens: int, prefill_tokens: int = 0,
+                             dtype_bytes: int = 2,
+                             weight_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+    """Paged-serving form of Eq. (3) (docs/DESIGN.md §Paging): the cache
+    term counts ``page_bytes`` — bytes of pages *actually allocated* (or
+    reserved: the scheduler passes allocated + outstanding worst-case
+    reservations at admission, and the allocator's high-watermark when
+    reporting the realised peak) — instead of requests * M_cache(L_max).
+    Everything else is the slot-map model unchanged, so paged and
+    monolithic admission differ exactly by their cache terms."""
+    dims = LayerDims.from_config(cfg)
+    act = max(serve_act_bytes(dims, decode_tokens, cfg, dtype_bytes),
+              serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
+    return serve_weight_bytes(cfg, weight_bytes) + page_bytes + act
+
+
+def serving_paged_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:
+    """Paged admission: allocated + reserved pages must keep the modeled
+    peak within alpha * M_GPU."""
+    return serving_paged_peak_bytes(cfg, **kw) <= hw.alpha * hw.hbm_bytes

@@ -65,6 +65,15 @@ def main() -> None:
                          "retry-after quote (docs/DESIGN.md §Resilience)")
     ap.add_argument("--max-waiting", type=int, default=0,
                     help="overload bound on the WAITING queue (0 = off)")
+    ap.add_argument("--page-size", type=int, default=0,
+                    help="paged cache: tokens per page (0 = monolithic "
+                         "slot map; docs/DESIGN.md §Paging)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="share common prompt prefixes through the "
+                         "page-level trie (requires --page-size)")
+    ap.add_argument("--preemption", action="store_true",
+                    help="spill low-priority residents to host when "
+                         "admission is refused (requires --page-size)")
     ap.add_argument("--inject", default=None,
                     help="chaos faults on scheduler steps, e.g. 'oom@20' "
                          "(faulted decode waves requeue accepted requests)")
@@ -101,22 +110,36 @@ def main() -> None:
         # discount it a second time
         hw = dataclasses.replace(hw, hbm_bytes=args.budget_gb * 1e9,
                                  alpha=1.0)
+    if (args.prefix_cache or args.preemption) and not args.page_size:
+        raise SystemExit("--prefix-cache/--preemption require --page-size")
     scfg = ServeConfig(max_slots=args.max_slots, cache_len=cache_len,
                        prefill_chunk=args.prefill_chunk, hw=hw,
                        temperature=args.temperature,
                        deadline_s=args.deadline_s,
-                       max_waiting=args.max_waiting)
+                       max_waiting=args.max_waiting,
+                       page_size=args.page_size,
+                       prefix_cache=args.prefix_cache,
+                       preemption=args.preemption)
 
     injector = None
     if args.inject:
         from repro.runtime.faults import FaultInjector
         injector = FaultInjector.from_string(args.inject)
-    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg,
-                                        key=jax.random.PRNGKey(args.seed),
-                                        injector=injector)
+    if args.page_size:
+        from repro.serving.paged_scheduler import PagedScheduler
+        sched = PagedScheduler(params, cfg, ctx, scfg,
+                               key=jax.random.PRNGKey(args.seed),
+                               injector=injector)
+    else:
+        sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg,
+                                            key=jax.random.PRNGKey(args.seed),
+                                            injector=injector)
+    mode = (f"paged(page={args.page_size}, prefix={args.prefix_cache}, "
+            f"preempt={args.preemption})" if args.page_size else "slot-map")
     print(f"serving {cfg.name}: {args.requests} requests, "
           f"rate={args.arrival_rate}/s, slots={args.max_slots}, "
-          f"cache_len={cache_len}, prefill_chunk={args.prefill_chunk}")
+          f"cache_len={cache_len}, prefill_chunk={args.prefill_chunk}, "
+          f"{mode}")
     m = sched.run(trace)
 
     budget_gb = m["budget_bytes"] / 1e9
@@ -130,6 +153,13 @@ def main() -> None:
           f"max occupancy {m['max_occupancy']}/{args.max_slots} slots")
     print(f"schedule: {m['decode_waves']} decode waves, "
           f"{m['prefill_chunks']} interleaved prefill chunks")
+    if args.page_size:
+        extra = ""
+        if args.prefix_cache:
+            extra = (f", prefix hit rate {m['prefix_hit_rate']:.2f} "
+                     f"({m['prefix_tokens_reused']} tokens reused)")
+        print(f"paging: page high-watermark {m['page_hwm_bytes'] / 1e9:.3f} GB"
+              f", {m['preemptions']} preemptions{extra}")
     if m["shed"] or m["faults"]:
         print(f"resilience: {m['shed']} shed "
               f"(retry-after p50 {m['retry_after_p50_s']:.1f}s), "

@@ -237,6 +237,48 @@ def write_attn_cache(cache: dict, k: jax.Array, v: jax.Array, pos0,
                 cache["v"], v.astype(cache["v"].dtype), pos0, axis=1)}
 
 
+def gather_paged_tokens(pool: jax.Array, table: jax.Array, token_axis: int,
+                        length: int) -> jax.Array:
+    """Assemble a dense token cache from page-pool rows.
+
+    ``pool``: (P, *page_shape) where ``page_shape[token_axis]`` is the page
+    size; ``table``: (..., n_blocks) int32 page ids (page 0 is the shared
+    zero page, so never-filled blocks read as the zero-initialised cache —
+    docs/DESIGN.md §Paging).  Returns (..., *dense_shape) with the token
+    axis merged to ``n_blocks * page`` and sliced to ``length`` (ragged
+    layouts pad the last page).
+    """
+    lead = table.ndim - 1
+    x = pool[table]                       # (..., n_blocks, *page_shape)
+    a = lead + token_axis
+    x = jnp.moveaxis(x, lead, a)          # block axis next to its page axis
+    sh = x.shape
+    x = x.reshape(sh[:a] + (sh[a] * sh[a + 1],) + sh[a + 2:])
+    return jax.lax.slice_in_dim(x, 0, length, axis=a)
+
+
+def scatter_paged_tokens(pool: jax.Array, table: jax.Array, dense: jax.Array,
+                         token_axis: int, page: int) -> jax.Array:
+    """Inverse of ``gather_paged_tokens``: split a dense token cache into
+    page rows and scatter them at ``table``'s ids.  Ragged token axes are
+    zero-padded into the last page's tail (never gathered back).  Duplicate
+    ids (CoW-shared pages gathered by several slots) carry bit-identical
+    rows, so scatter order cannot matter; scratch-page ids (1) absorb
+    writes from unallocated blocks and inactive slots."""
+    lead = table.ndim - 1
+    a = lead + token_axis
+    nb = table.shape[-1]
+    pad = nb * page - dense.shape[a]
+    if pad:
+        width = [(0, 0)] * dense.ndim
+        width[a] = (0, pad)
+        dense = jnp.pad(dense, width)
+    sh = dense.shape
+    dense = dense.reshape(sh[:a] + (nb, page) + sh[a + 1:])
+    dense = jnp.moveaxis(dense, a, lead)  # (..., n_blocks, *page_shape)
+    return pool.at[table].set(dense)
+
+
 def _extend_mask(spec: LayerSpec, key_pos: jax.Array,
                  q_pos: jax.Array) -> jax.Array:
     """(C, Skv) visibility: causal over key *positions* (-1 = empty slot),

@@ -145,10 +145,29 @@ class ServingGuard:
     * ``retry_after`` — the quote handed to shed clients: the current
       backlog drained at the observed request service rate, floored at
       one second so clients never hammer-retry.
+    * ``admission_escalation`` — the ordered memory-pressure ladder a
+      paged scheduler walks when admission would be refused
+      (docs/DESIGN.md §Paging): first reclaim prefix-cache pages (loses
+      only *recomputable* state), then preempt a lower-priority resident
+      (its pages spill to host and restore losslessly on re-admission),
+      and only then leave the request WAITING — where the existing
+      deadline/overload shedding applies to never-accepted requests.
+      Preemption before shedding is what preserves the no-accepted-loss
+      invariant under pressure: shedding is terminal, preemption is not.
     """
     deadline_s: Optional[float] = None
     max_waiting: int = 0
     shed: list = field(default_factory=list)
+
+    #: pressure-relief rungs, cheapest-to-reverse first
+    ESCALATION = ("evict_prefix", "preempt", "wait_or_shed")
+
+    def admission_escalation(self, prefix_cache: bool,
+                             preemption: bool) -> tuple:
+        """The rungs enabled by the scheduler's feature flags, in order."""
+        return tuple(r for r in self.ESCALATION
+                     if (r != "evict_prefix" or prefix_cache)
+                     and (r != "preempt" or preemption))
 
     def deadline_for(self, req) -> Optional[float]:
         return req.deadline_s if req.deadline_s is not None else self.deadline_s

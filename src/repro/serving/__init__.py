@@ -1,5 +1,9 @@
 from repro.serving.engine import (generate, get_decode_step, get_extend_step,
                                   init_serve_cache, make_serve_step, prefill,
                                   prefill_chunked, prefill_replay)
+from repro.serving.paged_cache import CacheLayout, PagedCachePool
+from repro.serving.paged_scheduler import PagedScheduler
+from repro.serving.paging import (PageAllocator, PagesExhausted, PageTableOps,
+                                  PrefixTrie, RequestPages, prefix_align)
 from repro.serving.scheduler import (ContinuousBatchingScheduler, Request,
                                      ServeConfig)

@@ -66,6 +66,8 @@ class Request:
     max_new_tokens: int
     arrival: float = 0.0                # seconds after scheduler start
     deadline_s: Optional[float] = None  # admission deadline (None = guard's)
+    priority: int = 0                   # preemption rank (paged scheduler):
+                                        # higher may preempt strictly lower
     # -- runtime (scheduler-owned) -----------------------------------------
     state: str = WAITING
     slot: int = -1
@@ -81,6 +83,11 @@ class Request:
                                         # re-prefill must NOT resample
     requeues: int = 0
     retry_after: Optional[float] = None # quote handed back when shed
+    # -- paged scheduler runtime (docs/DESIGN.md §Paging) -------------------
+    rp: object = None                   # RequestPages while resident
+    pos: int = 0                        # decode write position (host-side)
+    spill: object = None                # host-spilled pages while preempted
+    preemptions: int = 0
 
 
 @dataclass(frozen=True)
@@ -98,6 +105,11 @@ class ServeConfig:
                                         # WAITING request older than this is
                                         # shed with retry-after
     max_waiting: int = 0                # overload bound on the queue (0 = off)
+    # -- paging (docs/DESIGN.md §Paging; 0/False = monolithic slot map) -----
+    page_size: int = 0                  # tokens per cache page
+    prefix_cache: bool = False          # trie-shared prompt prefixes
+    preemption: bool = False            # spill low-priority residents under
+                                        # admission pressure
 
 
 class ContinuousBatchingScheduler:

@@ -1,0 +1,444 @@
+"""Stateful property tests for the paged serving memory path.
+
+The paging bookkeeping (serving/paging.py) is pure host-side Python, so it
+gets the strongest harness in the repo: seeded random walks over the full
+operation alphabet — alloc / free / CoW fork / prefix adopt / trie
+register / preempt-spill / restore — cross-checked after EVERY operation
+against an independent reference model (refcounts recomputed from scratch
+by walking request tables and trie pins) plus the allocator's own audit
+(allocated + free == total, no double free, no ref < 1, reserved pages
+never handed out).
+
+The driver is hand-rolled rather than hypothesis-based so the walks run
+everywhere (conftest.py skips @given tests when hypothesis is absent);
+failures shrink by greedy op-deletion and report the minimal sequence.
+"""
+
+import collections
+import random
+
+import pytest
+
+from repro.serving.paging import (RESERVED_PAGES, STATE_SPACE,
+                                  AllocatorCorruption, Group, PageAllocator,
+                                  PagesExhausted, PageTableOps, PrefixTrie,
+                                  prefix_align, space_key)
+
+LIN = Group(length=16, ring=False)      # 4 blocks @ page 4
+RING = Group(length=8, ring=True)       # 2 blocks @ page 4
+PAGE = 4
+
+
+# ---------------------------------------------------------------------------
+# driver: applies concrete ops, checks invariants after every one
+# ---------------------------------------------------------------------------
+
+class Driver:
+    """Holds the system under test plus everything needed to recompute its
+    expected refcounts from first principles."""
+
+    def __init__(self, groups=(LIN, RING), kv_pages=(10, 6), state_blocks=5,
+                 trie=False, align=None):
+        self.groups = list(groups)
+        self.alloc = PageAllocator()
+        for g, n in zip(self.groups, kv_pages):
+            self.alloc.add_space(space_key(g), n, page_bytes=float(PAGE))
+        self.alloc.add_space(STATE_SPACE, state_blocks, page_bytes=1.0)
+        self.ops = PageTableOps(self.alloc, self.groups, PAGE,
+                                state_bytes=1.0)
+        self.trie = (PrefixTrie(self.ops, align or PAGE, max_nodes=6)
+                     if trie else None)
+        self.requests = {}              # rid -> RequestPages
+        self.prompts = {}               # rid -> tuple of token ids
+        self.spills = {}                # rid -> {"mask": ..., "state": bool}
+
+    # -- independent reference model ----------------------------------------
+
+    def expected_refs(self):
+        exp = collections.Counter()
+        for rp in self.requests.values():
+            for g in self.groups:
+                for p in rp.tables[g]:
+                    if p is not None:
+                        exp[(space_key(g), p)] += 1
+            if rp.state_block is not None:
+                exp[(STATE_SPACE, rp.state_block)] += 1
+        if self.trie is not None:
+            def walk(level):
+                for node in level.values():
+                    for g, pages in node.pages.items():
+                        for p in pages:
+                            exp[(space_key(g), p)] += 1
+                    walk(node.children)
+            walk(self.trie.root)
+        return exp
+
+    def check(self):
+        self.alloc.audit()
+        exp = self.expected_refs()
+        for key, sp in self.alloc.spaces.items():
+            want = {p: c for (k, p), c in exp.items() if k == key}
+            assert dict(sp.ref) == want, (
+                f"space {key}: allocator refs {dict(sp.ref)} != "
+                f"ownership count {want}")
+            for p in sp.ref:
+                assert p >= RESERVED_PAGES
+        for rp in self.requests.values():
+            for g in self.groups:
+                for b in rp.shared[g]:
+                    page = rp.tables[g][b]
+                    assert page is not None
+                    assert self.alloc.refcount(space_key(g), page) >= 1
+        # private_bytes mirrors exclusively-owned pages exactly
+        for rp in self.requests.values():
+            want = 0.0
+            for g in self.groups:
+                pb = self.alloc.spaces[space_key(g)].page_bytes
+                want += sum(pb for b, p in enumerate(rp.tables[g])
+                            if p is not None and b not in rp.shared[g])
+            if rp.state_block is not None:
+                want += 1.0
+            assert rp.private_bytes == want, (
+                f"private_bytes {rp.private_bytes} != owned {want}")
+
+    # -- op application (unknown rids / full spaces are benign no-ops) -------
+
+    def apply(self, op):
+        name, args = op[0], op[1:]
+        try:
+            getattr(self, "op_" + name)(*args)
+        except PagesExhausted:
+            pass                         # exhaustion must leave it consistent
+
+    def op_new(self, rid):
+        if rid not in self.requests and rid not in self.spills:
+            self.requests[rid] = self.ops.new_request()
+
+    def op_state(self, rid):
+        if rid in self.requests:
+            self.ops.alloc_state(self.requests[rid])
+
+    def op_block(self, rid, gi, b):
+        if rid in self.requests:
+            g = self.groups[gi]
+            if b < g.blocks(PAGE):
+                self.ops.ensure_block(self.requests[rid], g, b)
+
+    def op_cow(self, rid, gi, b):
+        if rid in self.requests:
+            g = self.groups[gi]
+            if b < g.blocks(PAGE):
+                self.ops.ensure_writable(self.requests[rid], g, b)
+
+    def op_fork(self, dst, src):
+        """CoW fork: a fresh request adopts every mapped block of ``src``
+        (what a prefix hit does, without the trie)."""
+        if src not in self.requests or dst in self.requests \
+                or dst in self.spills:
+            return
+        rp = self.ops.new_request()
+        self.requests[dst] = rp
+        for g in self.groups:
+            for b, p in enumerate(self.requests[src].tables[g]):
+                if p is not None:
+                    self.ops.adopt_shared(rp, g, b, p)
+
+    def op_release(self, rid):
+        if rid in self.requests:
+            self.ops.release(self.requests.pop(rid))
+
+    def op_spill(self, rid):
+        if rid in self.requests:
+            rp = self.requests.pop(rid)
+            self.spills[rid] = {
+                "mask": {g: [p is not None for p in rp.tables[g]]
+                         for g in self.groups},
+                "state": rp.state_block is not None}
+            self.ops.release(rp)
+
+    def op_restore(self, rid):
+        if rid not in self.spills:
+            return
+        saved = self.spills[rid]
+        rp = self.ops.new_request()
+        try:
+            for g in self.groups:
+                for b, had in enumerate(saved["mask"][g]):
+                    if had:
+                        self.ops.ensure_block(rp, g, b)
+            if saved["state"]:
+                self.ops.alloc_state(rp)
+        except PagesExhausted:
+            self.ops.release(rp)         # failed restore frees the partial rp
+            raise
+        del self.spills[rid]
+        self.requests[rid] = rp
+
+    def teardown(self):
+        """Release everything; the allocator must drain to fully free."""
+        for rid in list(self.requests):
+            self.op_release(rid)
+            self.check()
+        if self.trie is not None:
+            self.trie.clear()
+            self.check()
+        for key, sp in self.alloc.spaces.items():
+            assert not sp.ref, f"space {key} leaked {dict(sp.ref)}"
+            assert len(sp.free) == sp.total
+
+
+# ---------------------------------------------------------------------------
+# walk generation + greedy-deletion shrinking
+# ---------------------------------------------------------------------------
+
+OP_WEIGHTS = [("new", 4), ("state", 2), ("block", 8), ("cow", 5),
+              ("fork", 3), ("release", 3), ("spill", 2), ("restore", 2)]
+
+
+def _gen_ops(seed, n_ops):
+    rng = random.Random(seed)
+    names = [n for n, w in OP_WEIGHTS for _ in range(w)]
+    ops, next_rid = [], 0
+    for _ in range(n_ops):
+        name = rng.choice(names)
+        if name == "new":
+            ops.append(("new", next_rid))
+            next_rid += 1
+        elif name == "fork":
+            ops.append(("fork", next_rid, rng.randrange(max(1, next_rid))))
+            next_rid += 1
+        elif name in ("block", "cow"):
+            ops.append((name, rng.randrange(max(1, next_rid)),
+                        rng.randrange(2), rng.randrange(4)))
+        else:
+            ops.append((name, rng.randrange(max(1, next_rid))))
+    return ops
+
+
+def _replay(ops_seq, **driver_kw):
+    d = Driver(**driver_kw)
+    for op in ops_seq:
+        d.apply(op)
+        d.check()
+    d.teardown()
+
+
+def _shrink(ops_seq, **driver_kw):
+    """Greedy delete-one-op minimisation of a failing sequence."""
+    def fails(seq):
+        try:
+            _replay(seq, **driver_kw)
+            return False
+        except (AssertionError, AllocatorCorruption):
+            return True
+
+    seq = list(ops_seq)
+    changed = True
+    while changed:
+        changed = False
+        for i in range(len(seq)):
+            cand = seq[:i] + seq[i + 1:]
+            if fails(cand):
+                seq = cand
+                changed = True
+                break
+    return seq
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_allocator_random_walk(seed):
+    """No sequence of alloc/free/fork/CoW/spill/restore double-frees, leaks,
+    or desyncs a refcount — and everything drains to zero at teardown."""
+    ops_seq = _gen_ops(seed, n_ops=150)
+    try:
+        _replay(ops_seq)
+    except (AssertionError, AllocatorCorruption) as exc:
+        minimal = _shrink(ops_seq)
+        pytest.fail(f"invariant violated: {exc}\nminimal sequence "
+                    f"({len(minimal)} ops): {minimal}")
+
+
+# ---------------------------------------------------------------------------
+# trie-inclusive walk: register / adopt / evict interleaved with lifecycle
+# ---------------------------------------------------------------------------
+
+class TrieDriver(Driver):
+    """Adds prefix-trie traffic on one linear group: admissions share
+    prompt prefixes, register aligned blocks with fake snapshots, and later
+    admissions adopt them."""
+
+    ALIGN = 8                           # 2 pages per node
+
+    def __init__(self):
+        super().__init__(groups=(Group(length=32, ring=False),),
+                         kv_pages=(40,), state_blocks=10, trie=True,
+                         align=self.ALIGN)
+        self.g = self.groups[0]
+
+    def op_admit(self, rid, prompt):
+        if rid in self.requests or rid in self.spills:
+            return
+        prompt = tuple(prompt)
+        matched, nodes = self.trie.lookup(prompt)
+        while matched >= len(prompt):
+            nodes.pop()
+            matched -= self.ALIGN
+        rp = self.ops.new_request()
+        self.requests[rid] = rp
+        self.prompts[rid] = prompt
+        self.trie.adopt(rp, nodes)
+        for b in range((len(prompt) + PAGE - 1) // PAGE):
+            self.ops.ensure_block(rp, self.g, b)
+        self.ops.alloc_state(rp)
+        upto = len(prompt) // self.ALIGN * self.ALIGN
+        snaps = {end: f"snap@{end}" for end in
+                 range(self.ALIGN, upto + 1, self.ALIGN)}
+        self.trie.register(prompt, upto, rp, snaps)
+
+    def op_evict(self):
+        self.trie.evict_lru_leaf()
+
+    def op_cow_any(self, rid, b):
+        if rid in self.requests and b < self.g.blocks(PAGE):
+            self.ops.ensure_writable(self.requests[rid], self.g, b)
+
+    def check(self):
+        super().check()
+        # node count bookkeeping matches the walked structure, and every
+        # pinned page is genuinely allocated
+        n = 0
+        stack = [self.trie.root]
+        while stack:
+            level = stack.pop()
+            for node in level.values():
+                n += 1
+                for g, pages in node.pages.items():
+                    for p in pages:
+                        assert self.alloc.refcount(space_key(g), p) >= 1
+                stack.append(node.children)
+        assert n == self.trie.n_nodes
+        assert n <= self.trie.max_nodes
+
+
+def _gen_trie_ops(seed, n_ops):
+    rng = random.Random(seed)
+    # prompts drawn from 3 shared stems so lookups actually hit
+    stems = [tuple(rng.randrange(50) for _ in range(24)) for _ in range(3)]
+    ops, next_rid = [], 0
+    names = (["admit"] * 6 + ["cow_any"] * 4 + ["release"] * 3 +
+             ["spill"] * 2 + ["restore"] * 2 + ["evict"] * 2)
+    for _ in range(n_ops):
+        name = rng.choice(names)
+        if name == "admit":
+            stem = rng.choice(stems)
+            length = rng.choice([8, 12, 16, 20, 24])
+            prompt = stem[:length - 4] + tuple(
+                rng.randrange(50) for _ in range(4))
+            ops.append(("admit", next_rid, prompt))
+            next_rid += 1
+        elif name == "cow_any":
+            ops.append(("cow_any", rng.randrange(max(1, next_rid)),
+                        rng.randrange(8)))
+        elif name == "evict":
+            ops.append(("evict",))
+        else:
+            ops.append((name, rng.randrange(max(1, next_rid))))
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(6))
+def test_trie_random_walk(seed):
+    """Prefix registration/adoption/eviction interleaved with CoW and
+    preemption keeps trie pins and request refs exactly consistent."""
+    ops_seq = _gen_trie_ops(seed, n_ops=120)
+    d = TrieDriver()
+    try:
+        for op in ops_seq:
+            d.apply(op)
+            d.check()
+        d.teardown()
+    except (AssertionError, AllocatorCorruption) as exc:
+        pytest.fail(f"trie walk (seed {seed}) violated an invariant: {exc}")
+
+
+# ---------------------------------------------------------------------------
+# deterministic edge cases the walks would only hit by luck
+# ---------------------------------------------------------------------------
+
+def test_allocator_misuse_is_corruption():
+    a = PageAllocator()
+    a.add_space("s", 2)
+    p = a.alloc("s")
+    assert p >= RESERVED_PAGES
+    a.decref("s", p)
+    with pytest.raises(AllocatorCorruption, match="double free"):
+        a.decref("s", p)
+    with pytest.raises(AllocatorCorruption, match="incref of unallocated"):
+        a.incref("s", p)
+    with pytest.raises(ValueError, match="already exists"):
+        a.add_space("s", 2)
+    a.audit()
+
+
+def test_allocator_exhaustion_and_hwm():
+    a = PageAllocator()
+    a.add_space("s", 3, page_bytes=10.0)
+    pages = [a.alloc("s") for _ in range(3)]
+    with pytest.raises(PagesExhausted):
+        a.alloc("s")
+    a.audit()
+    assert a.allocated_bytes() == 30.0
+    a.decref("s", pages[0])
+    assert a.allocated_bytes() == 20.0
+    assert a.hwm_bytes() == 30.0          # watermark survives the free
+    q = a.alloc("s")
+    assert q == pages[0]                  # LIFO reuse of the freed page
+    a.audit()
+
+
+def test_cow_refcounts_hit_zero_exactly_at_release():
+    """A page shared R ways frees exactly when the R-th owner lets go —
+    no sooner (CoW forks decref but can't free a shared page) and no later
+    (release drops the last ref)."""
+    d = Driver()
+    d.apply(("new", 0))
+    d.apply(("block", 0, 0, 0))
+    page = d.requests[0].tables[LIN][0]
+    for rid in (1, 2):
+        d.apply(("fork", rid, 0))
+    assert d.alloc.refcount(space_key(LIN), page) == 3
+    d.apply(("cow", 1, 0, 0))             # fork 1 copies away
+    assert d.alloc.refcount(space_key(LIN), page) == 2
+    d.apply(("release", 0))
+    assert d.alloc.refcount(space_key(LIN), page) == 1
+    d.apply(("release", 2))
+    assert d.alloc.refcount(space_key(LIN), page) == 0
+    d.check()
+    d.apply(("release", 1))
+    d.teardown()
+
+
+def test_worst_case_bytes_reservation():
+    ops = Driver().ops                    # LIN page_bytes 4.0, RING 4.0
+    # linear 16-slot group: 10 tokens -> 3 blocks; ring 8-slot: wraps at
+    # total 10 > 8 -> all 2 blocks private.  + state (1.0)
+    assert ops.worst_case_bytes(10) == 3 * 4.0 + 2 * 4.0 + 1.0
+    # an 8-token shared prefix discounts 2 linear blocks; the wrapped ring
+    # still worst-cases to fully private
+    assert ops.worst_case_bytes(10, shared_len=8) == 1 * 4.0 + 2 * 4.0 + 1.0
+    # short request, no wrap: ring occupies ceil(6/4)=2 blocks anyway
+    assert ops.worst_case_bytes(6) == 2 * 4.0 + 2 * 4.0 + 1.0
+
+
+def test_group_block_math():
+    assert RING.touched_blocks(6, 10, PAGE) == {0, 1}     # wraps 8 -> 0
+    assert RING.touched_blocks(0, 20, PAGE) == {0, 1}     # >= length: all
+    assert LIN.touched_blocks(4, 6, PAGE) == {1}
+    assert LIN.touched_blocks(5, 5, PAGE) == set()
+    assert RING.block_of(9, PAGE) == 0 and LIN.block_of(9, PAGE) == 2
+
+
+def test_prefix_align_is_lcm():
+    assert prefix_align(8, 8) == 8
+    assert prefix_align(8, 12) == 24
+    assert prefix_align(16, 8) == 16

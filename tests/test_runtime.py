@@ -351,3 +351,159 @@ def test_accepted_requests_are_deadline_exempt(serve_setup):
     assert requeued.state == WAITING
     assert [r.rid for r in sched.queue] == [requeued.rid]
     assert not any(r.accepted for r in sched.shed)
+
+
+# -- paged serving: faults mid-preemption / mid-CoW (docs/DESIGN.md §Paging) --
+
+def _paged_drained(sched):
+    """Allocator is consistent and fully drains once the trie lets go."""
+    sched.pool.alloc.audit()
+    if sched.trie is not None:
+        sched.trie.clear()
+    for key in sched.pool.alloc.spaces:
+        assert sched.pool.alloc.allocated(key) == 0, f"space {key} leaked"
+
+
+def _mono_reference(serve_setup, trace_fn):
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+    params, cfg, ctx = serve_setup
+    scfg = ServeConfig(max_slots=4, cache_len=96, prefill_chunk=8)
+    sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg,
+                                        key=jax.random.PRNGKey(1))
+    sched.run(trace_fn())
+    return {r.rid: list(r.out) for r in sched.finished}
+
+
+def test_fault_mid_preemption_leaves_allocator_consistent(serve_setup):
+    """An injected fault that fires inside the preemption spill — after the
+    host copy, before any reference drops — aborts the spill with the
+    victim still resident, the allocator intact, and zero accepted loss;
+    the preemption retries once the injector disarms."""
+    import dataclasses
+    import types
+
+    from repro.configs.base import GPU_64G
+    from repro.core import memory_model as mm
+    from repro.serving.paged_scheduler import PagedScheduler
+    from repro.serving.scheduler import Request, ServeConfig
+
+    params, cfg, ctx = serve_setup
+
+    def trace():
+        rng = np.random.default_rng(5)
+        mk = lambda i, gen, prio: Request(  # noqa: E731
+            rid=i, tokens=rng.integers(0, cfg.vocab_size, 16).astype(np.int32),
+            max_new_tokens=gen, arrival=0.0, priority=prio)
+        return [mk(0, 12, 0), mk(1, 4, 1), mk(2, 4, 1), mk(3, 4, 1)]
+
+    scfg0 = ServeConfig(max_slots=4, cache_len=32, prefill_chunk=8,
+                        page_size=8, preemption=True)
+    probe = PagedScheduler(params, cfg, ctx, scfg0, key=jax.random.PRNGKey(1))
+    per_req = probe.pool.ops.worst_case_bytes(16 + 12)
+    base = mm.serving_paged_peak_bytes(cfg, page_bytes=0, decode_tokens=4,
+                                       prefill_tokens=8)
+    hw = dataclasses.replace(GPU_64G, hbm_bytes=base + 2.2 * per_req,
+                             alpha=1.0)
+    scfg = dataclasses.replace(scfg0, hw=hw)
+
+    # dry run: record the scheduler step of the first preemption
+    preempt_steps = []
+    dry = PagedScheduler(params, cfg, ctx, scfg, key=jax.random.PRNGKey(1))
+    orig = PagedScheduler._preempt
+
+    def rec(self, victim):
+        preempt_steps.append(self.steps)
+        return orig(self, victim)
+
+    dry._preempt = types.MethodType(rec, dry)
+    dm = dry.run(trace())
+    assert dm["preemptions"] >= 1 and preempt_steps
+
+    # armed run: the OOM lands exactly at the "preempt_spill" fault point
+    inj = FaultInjector.from_string(f"oom@{preempt_steps[0]}")
+    sched = PagedScheduler(params, cfg, ctx, scfg,
+                           key=jax.random.PRNGKey(1), injector=inj)
+    m = sched.run(trace())
+    assert m["faults"] >= 1                     # the spill aborted once
+    assert m["preemptions"] >= 1                # and succeeded on retry
+    assert m["requests"] == 4 and m["shed"] == 0
+    got = {r.rid: list(r.out) for r in sched.finished}
+    assert got == _mono_reference(serve_setup, trace)
+    _paged_drained(sched)
+
+
+def test_fault_mid_cow_fork_no_loss(serve_setup):
+    """An injected fault at the CoW fork point — a ring write cursor
+    re-entering a prefix-shared page — fires before any bookkeeping
+    mutates: the wave requeues its requests, the allocator stays
+    consistent, and the replayed run matches the unfaulted tokens."""
+    from repro.serving.paged_scheduler import PagedScheduler
+    from repro.serving.scheduler import Request, ServeConfig
+
+    params, cfg, ctx = serve_setup
+
+    def trace():
+        rng = np.random.default_rng(7)
+        stem = rng.integers(0, cfg.vocab_size, 32).astype(np.int32)
+        # rid 0 registers the prompt; rid 1 adopts it and generates past
+        # the window-64 ring, wrapping into the adopted pages
+        return [Request(rid=0, tokens=stem.copy(), max_new_tokens=4,
+                        arrival=0.0),
+                Request(rid=1, tokens=stem.copy(), max_new_tokens=40,
+                        arrival=0.0)]
+
+    scfg = ServeConfig(max_slots=4, cache_len=96, prefill_chunk=8,
+                       page_size=8, prefix_cache=True)
+
+    # dry run: record which scheduler step reaches the CoW fork
+    cow_steps = []
+    dry = PagedScheduler(params, cfg, ctx, scfg, key=jax.random.PRNGKey(1))
+    dry.pool.ops.fault_hook = lambda where: cow_steps.append(
+        (dry.steps, where))
+    dry.run(trace())
+    hits = [s for s, where in cow_steps if where == "cow_fork"]
+    assert hits, "trace never reached a CoW fork — scenario regressed"
+
+    inj = FaultInjector.from_string(f"oom@{hits[0]}")
+    sched = PagedScheduler(params, cfg, ctx, scfg,
+                           key=jax.random.PRNGKey(1), injector=inj)
+    m = sched.run(trace())
+    assert m["faults"] == 1 and m["requeues"] >= 1
+    assert m["requests"] == 2
+    got = {r.rid: list(r.out) for r in sched.finished}
+    assert got == _mono_reference(serve_setup, trace)
+    _paged_drained(sched)
+
+
+def test_paged_chaos_run_keeps_all_accepted(serve_setup):
+    """Repeated wave faults with prefix cache + preemption enabled: every
+    accepted request still finishes with unfaulted-identical tokens and
+    the allocator drains clean."""
+    from repro.serving.paged_scheduler import PagedScheduler
+    from repro.serving.scheduler import Request, ServeConfig
+
+    params, cfg, ctx = serve_setup
+
+    def trace():
+        rng = np.random.default_rng(3)
+        stem = rng.integers(0, cfg.vocab_size, 16).astype(np.int32)
+        out = []
+        for i in range(5):
+            tail = rng.integers(0, cfg.vocab_size, 8).astype(np.int32)
+            out.append(Request(rid=i, tokens=np.concatenate([stem, tail]),
+                               max_new_tokens=5, arrival=0.0))
+        return out
+
+    scfg = ServeConfig(max_slots=3, cache_len=96, prefill_chunk=8,
+                       page_size=8, prefix_cache=True, preemption=True)
+    inj = FaultInjector(specs=[FaultSpec(kind="oom", at=4),
+                               FaultSpec(kind="oom", at=9)])
+    sched = PagedScheduler(params, cfg, ctx, scfg,
+                           key=jax.random.PRNGKey(1), injector=inj)
+    m = sched.run(trace())
+    assert m["faults"] == 2 and m["requests"] == 5
+    assert set(r.rid for r in sched.finished) == set(range(5))
+    got = {r.rid: list(r.out) for r in sched.finished}
+    assert got == _mono_reference(serve_setup, trace)
+    _paged_drained(sched)
