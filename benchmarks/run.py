@@ -14,13 +14,14 @@ from benchmarks import (ablation_capacity, adaptive_microbench,
                         chaos_harness, compiled_memory, dispatch_microbench,
                         fig2_distribution, fig4_throughput, fig5_mact,
                         fused_microbench, paging_microbench,
-                        pipeline_microbench, roofline, serving_microbench,
-                        table4_memory)
+                        pipeline_microbench, placement_microbench, roofline,
+                        serving_microbench, table4_memory)
 
 SUITES = {
     "dispatch": dispatch_microbench.run,  # single-sort planner vs old path
     "fused": fused_microbench.run,        # 1-launch fused leg + autotuner
     "pipeline": pipeline_microbench.run,  # sequential vs pipelined FCDA
+    "placement": placement_microbench.run,  # expert placement vs identity
     "adaptive": adaptive_microbench.run,  # per-layer MACT vs static global
     "serving": serving_microbench.run,    # continuous vs static batching
     "paging": paging_microbench.run,      # paged vs monolithic KV cache

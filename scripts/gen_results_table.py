@@ -84,6 +84,29 @@ def pipeline_table() -> list[str]:
     return out
 
 
+def placement_table() -> list[str]:
+    d = _load("BENCH_placement.json")
+    if not d:
+        return ["(BENCH_placement.json missing — run "
+                "`benchmarks.run placement`)"]
+    r = d["row"]
+    spec = r["placement"]
+    replicated = len(spec[2]) - spec[0]
+    out = ["| layout | bottleneck-peer FFN ms | vs balanced |",
+           "|---|---|---|",
+           f"| balanced routing | {r['balanced_ms']:.3f} | 1.00x |",
+           f"| identity, skewed | {r['identity_ms']:.3f} "
+           f"| {r['identity_over_balanced']:.2f}x |",
+           f"| **placed + replicated, skewed** | **{r['placed_ms']:.3f}** "
+           f"| **{r['placed_over_balanced']:.2f}x** |",
+           "",
+           f"All tokens routed to 2 of {d['experts']} experts; the solved "
+           f"placement ({replicated} replica slot(s)) restores the balanced "
+           f"per-peer load on {d['devices']} EP peers.  Placed output parity "
+           f"vs identity: {r['parity']}, drops {r['drops']:.0f}."]
+    return out
+
+
 def adaptive_table() -> list[str]:
     d = _load("BENCH_adaptive.json")
     if not d:
@@ -263,24 +286,32 @@ def dryrun_tables() -> None:
             print(row)
 
 
+def _section(title: str, table, first: bool = False) -> None:
+    """Emit one table; a stale/partial BENCH_*.json (e.g. a schema from an
+    older benchmark revision) skips the section instead of crashing the
+    whole render."""
+    print(f"{'' if first else chr(10)}### {title}\n")
+    try:
+        print("\n".join(table()))
+    except Exception as e:  # noqa: BLE001 — render what we can
+        print(f"(skipped: {type(e).__name__}: {e} — re-run the benchmark)")
+
+
 def main() -> None:
     if len(sys.argv) > 1 and sys.argv[1] == "dryrun":
         dryrun_tables()
         return
-    print("### Dispatch planning (single-sort vs two-sort, CPU)\n")
-    print("\n".join(dispatch_table()))
-    print("\n### Fused MoE leg (single launch vs three, interpret)\n")
-    print("\n".join(fused_table()))
-    print("\n### Pipelined FCDA (8-device host mesh)\n")
-    print("\n".join(pipeline_table()))
-    print("\n### Adaptive per-layer MACT (drifting skewed load)\n")
-    print("\n".join(adaptive_table()))
-    print("\n### Continuous-batching serving (mixed-length trace, CPU)\n")
-    print("\n".join(serving_table()))
-    print("\n### Paged KV cache (vs monolithic slot map, CPU)\n")
-    print("\n".join(paging_table()))
-    print("\n### Fault tolerance (chaos harness, injected faults)\n")
-    print("\n".join(chaos_table()))
+    _section("Dispatch planning (single-sort vs two-sort, CPU)",
+             dispatch_table, first=True)
+    _section("Fused MoE leg (single launch vs three, interpret)", fused_table)
+    _section("Pipelined FCDA (8-device host mesh)", pipeline_table)
+    _section("Expert placement + replication (skewed routing, 4 EP peers)",
+             placement_table)
+    _section("Adaptive per-layer MACT (drifting skewed load)", adaptive_table)
+    _section("Continuous-batching serving (mixed-length trace, CPU)",
+             serving_table)
+    _section("Paged KV cache (vs monolithic slot map, CPU)", paging_table)
+    _section("Fault tolerance (chaos harness, injected faults)", chaos_table)
 
 
 if __name__ == "__main__":

@@ -33,6 +33,7 @@ from repro.compat import shard_map
 from repro.configs.base import MoEConfig
 from repro.core import dispatch as dsp
 from repro.core.chunking import ChunkStages, chunked_pipeline
+from repro.core.placement import PlacementSpec, place_expert_idx
 from repro.core.router import route
 from repro.kernels.ops import (combine_rows, dispatch_rows, expert_ffn,
                                moe_ffn as fused_moe_leg, ragged_expert_ffn)
@@ -46,11 +47,25 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
               chunks: int, remat: bool, ep_axis: str, all_axes: tuple,
               use_pallas: bool, ragged: bool = False,
               interpret: bool = False, pipeline: int = 1,
-              ragged_block: int = RAGGED_BLOCK, fused: bool = False):
+              ragged_block: int = RAGGED_BLOCK, fused: bool = False,
+              placement: PlacementSpec | None = None):
     """Per-device body. x_l: (B_l, S_l, d) local tokens."""
     peers = compat.axis_size(ep_axis)
     E = moe_cfg.num_experts
-    e_local = E // peers
+    # With a placement the dispatch groups are weight SLOTS, not expert ids:
+    # the single-sort planner is group-id agnostic, so sorting by slot id
+    # still groups by target peer (slots are peer-contiguous by construction)
+    # and the counts-matrix reconstruction on the receiver is unchanged
+    # (docs/DESIGN.md §Placement).  e_local below is slots-per-peer.
+    if placement is not None:
+        if placement.num_experts != E or placement.num_peers != peers:
+            raise ValueError(
+                f"placement for (E={placement.num_experts}, "
+                f"P={placement.num_peers}), layer has (E={E}, P={peers})")
+        n_groups = placement.total_slots
+    else:
+        n_groups = E
+    e_local = n_groups // peers
     b_l, s_l, d = x_l.shape
     tokens = b_l * s_l
     x2 = x_l.reshape(tokens, d)
@@ -60,19 +75,25 @@ def _ep_local(x_l, router_w, router_b, w1, w3, w2, *, moe_cfg: MoEConfig,
     def stage_dispatch(xc):
         """Route + single-sort plan + dispatch all-to-all (in-flight state)."""
         r = route({"w": router_w, "bias": router_b}, xc, moe_cfg)
+        # placement: expert id -> weight-slot id, replicas split by token
+        # index parity (deterministic; identity spec short-circuits)
+        sel = place_expert_idx(r.expert_idx, placement)
         if moe_cfg.capacity_mode == "dropless":
             # a token's k experts are distinct, so at most min(k, E_local) of
             # its slots can target one peer, and at most one can land on a
-            # given expert — exact worst cases, not heuristics
+            # given expert/slot — exact worst cases, not heuristics (a peer
+            # hosts each expert in at most one slot, so this survives
+            # replication unchanged)
             cap_send = t_c * min(k, e_local)
         else:
             cap_send = dsp.balanced_capacity(t_c, k, peers, moe_cfg.capacity_factor)
         # ---- dispatch: ONE stable argsort per chunk plans everything ------
-        # sorting by global expert id groups by target device too (experts
-        # are contiguous per peer), and within each peer block rows arrive
-        # expert-sorted, so the receiver places rows with cumsums over the
-        # exchanged counts matrix — no second sort (docs/DESIGN.md §Dispatch)
-        uplan = dsp.make_unified_plan(r.expert_idx, E, peers,
+        # sorting by global group id (expert, or slot under placement)
+        # groups by target device too (groups are contiguous per peer), and
+        # within each peer block rows arrive group-sorted, so the receiver
+        # places rows with cumsums over the exchanged counts matrix — no
+        # second sort (docs/DESIGN.md §Dispatch)
+        uplan = dsp.make_unified_plan(sel, n_groups, peers,
                                       cap_send=cap_send)
         send = dispatch_rows(xc, uplan.send_slots, peers * cap_send,
                              use_pallas=use_pallas, interpret=interpret)
@@ -181,18 +202,34 @@ def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
                chunks: int = 1, remat: bool = True,
                use_pallas: bool = False, ragged: bool = False,
                interpret: bool = False, pipeline: int = 1,
-               ragged_block: int = RAGGED_BLOCK, fused: bool = False):
+               ragged_block: int = RAGGED_BLOCK, fused: bool = False,
+               placement: PlacementSpec | None = None):
     """x: (B, S, d) global -> (y, stats).  B sharded over batch_axes, S over
     ep_axis (the EP group = one row of the model axis).  ``pipeline`` is the
     FCDA schedule depth: 1 = sequential loop, >= 2 = overlapped chunks.
     ``fused`` runs the local expert leg as ONE kernel launch over the ragged
-    layout (kernels/fused_moe.py) instead of dispatch/FFN/combine."""
+    layout (kernels/fused_moe.py) instead of dispatch/FFN/combine.
+    ``placement`` re-homes expert weights across EP peers (and replicates
+    hot experts) per docs/DESIGN.md §Placement; identity/None is the
+    hardcoded contiguous mapping."""
     all_axes = tuple(batch_axes) + (ep_axis,)
+    if placement is not None and placement.is_identity:
+        placement = None            # bitwise-identical fast path
+    w1, w3, w2 = params["w1"], params["w3"], params["w2"]
+    if placement is not None:
+        placement.validate()
+        # Re-home the expert weights into slot order.  This global gather of
+        # the EP-sharded canonical weights IS the migration all-to-all on a
+        # real mesh (each peer pulls the slices its slots need); under
+        # autodiff its transpose scatter-adds every replica's gradient back
+        # into the canonical (E, d, f) rows.
+        idx = jnp.asarray(placement.slot_to_expert, dtype=jnp.int32)
+        w1, w3, w2 = w1[idx], w3[idx], w2[idx]
     fn = functools.partial(
         _ep_local, moe_cfg=moe_cfg, chunks=chunks, remat=remat,
         ep_axis=ep_axis, all_axes=all_axes, use_pallas=use_pallas,
         ragged=ragged, interpret=interpret, pipeline=pipeline,
-        ragged_block=ragged_block, fused=fused)
+        ragged_block=ragged_block, fused=fused, placement=placement)
     x_spec = P(tuple(batch_axes), ep_axis, None)
     stats_spec = {"aux_loss": P(), "load": P(None), "drops": P()}
     return shard_map(
@@ -204,5 +241,4 @@ def moe_ffn_ep(params: dict, x: jax.Array, moe_cfg: MoEConfig, mesh, *,
         # pallas_call (interpret) emits ShapeDtypeStructs without vma info;
         # manual-axis correctness is covered by tests/test_distributed.py
         check_vma=False,
-    )(x, params["router"]["w"], params["router"]["bias"],
-      params["w1"], params["w3"], params["w2"])
+    )(x, params["router"]["w"], params["router"]["bias"], w1, w3, w2)

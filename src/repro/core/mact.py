@@ -54,6 +54,11 @@ class MACTController:
                                          # 2h dispatch-buffer term, so s'_max
                                          # grows and the planner picks coarser
                                          # bins (docs/DESIGN.md §6)
+    replica_slots: int = 0               # hot-expert replica weight slots per
+                                         # peer (docs/DESIGN.md §Placement):
+                                         # their weight bytes come off the
+                                         # Eq. 8 budget, their load cut shows
+                                         # up through observed_s_pp(placement)
     history: list = field(default_factory=list)
 
     def __post_init__(self):
@@ -63,16 +68,27 @@ class MACTController:
 
     # -- Eq. 8 ---------------------------------------------------------------
     def s_prime_max(self) -> float:
+        replica = mm.replica_weight_bytes(self.cfg, self.replica_slots,
+                                          self.par)
         return mm.s_prime_max(self.dims, self.seq_len, self.par, self.hw,
                               self.static, copies=self.copies,
-                              dtype_bytes=self.dtype_bytes, fused=self.fused)
+                              dtype_bytes=self.dtype_bytes, fused=self.fused,
+                              replica_bytes=replica)
 
     # -- s'' from router statistics -------------------------------------------
-    def observed_s_pp(self, load: np.ndarray, ep_size: Optional[int] = None) -> float:
+    def observed_s_pp(self, load: np.ndarray, ep_size: Optional[int] = None,
+                      placement=None) -> float:
         """Worst per-device received-token count from a global expert-load
-        vector (token-slots per expert, summed over the step)."""
-        e = ep_size or self.par.e
+        vector (token-slots per expert, summed over the step).
+
+        With a ``PlacementSpec`` the per-peer reduction goes *through* the
+        placement map (replicated experts' load split across their slots)
+        instead of assuming the identity contiguous expert layout
+        (docs/DESIGN.md §Placement)."""
         load = np.asarray(load, dtype=np.float64)
+        if placement is not None:
+            return float(placement.peer_loads(load).max())
+        e = ep_size or self.par.e
         if load.size % e:
             raise ValueError(
                 f"expert-load vector of size {load.size} does not divide "
@@ -165,7 +181,8 @@ class MACTController:
                                max_depth: int = 2,
                                current: Optional[Sequence[ScheduleSpec]] = None,
                                hysteresis: float = 0.0,
-                               headroom: float = 0.0) -> tuple:
+                               headroom: float = 0.0,
+                               placements: Optional[Sequence] = None) -> tuple:
         """Resolve one ``ScheduleSpec`` per MoE layer from per-layer loads.
 
         ``loads`` is the telemetry EMA matrix ``(num_layers, E)`` (or None at
@@ -185,6 +202,11 @@ class MACTController:
           in s'', so this is exactly "the predicted memory delta clears the
           threshold" expressed on the load axis.
 
+        ``placements`` (one PlacementSpec per layer, docs/DESIGN.md
+        §Placement) routes each layer's per-peer load reduction through its
+        placement map: a placed/replicated layer sees a lower s'' and so
+        prices a cheaper schedule — the MACT side of the placement trade.
+
         Returns a tuple of ``ScheduleSpec`` (hashable: the trainer's
         compiled-step cache key).
         """
@@ -197,7 +219,9 @@ class MACTController:
                 raise ValueError(
                     f"per-layer load matrix of shape {loads.shape}, expected "
                     f"({num_layers}, E)")
-            s_pps = [self.observed_s_pp(loads[j], ep_size)
+            s_pps = [self.observed_s_pp(
+                         loads[j], ep_size,
+                         placements[j] if placements is not None else None)
                      * (1.0 + headroom)
                      for j in range(num_layers)]
         out = []

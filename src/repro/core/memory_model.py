@@ -237,16 +237,40 @@ def fits(static: float, act: float, hw: HardwareProfile) -> bool:
     return static + act <= hw.alpha * hw.hbm_bytes
 
 
+def replica_weight_bytes(cfg: ModelConfig, extra_slots_per_peer: int,
+                         par: Parallelism,
+                         bytes_per_param: float = WEIGHT_ONLY_BYTES) -> float:
+    """Per-GPU weight bytes of hot-expert replica slots (docs/DESIGN.md
+    §Placement, docs/MEMORY_MODEL.md replica weight term).
+
+    Each MoE layer's placement may carve ``extra_slots_per_peer`` weight
+    slots per peer beyond the identity e_local; a replica costs its expert's
+    3*h*g_e/t parameters in weight-only bytes (gradients and optimizer state
+    stay on the canonical copy — replicas are derived views refreshed at
+    replan boundaries).  Divided by the pipeline size like ``static_bytes``:
+    a stage only hosts replicas for its own MoE layers."""
+    if cfg.moe is None or extra_slots_per_peer <= 0:
+        return 0.0
+    n_moe = sum(1 for spec in cfg.layer_specs() if spec.ffn == "moe")
+    per_slot = 3 * cfg.d_model * cfg.moe.d_ff_expert / par.t
+    return extra_slots_per_peer * per_slot * bytes_per_param * n_moe / par.p
+
+
 def s_prime_max(dims: LayerDims, s: int, par: Parallelism, hw: HardwareProfile,
                 static: float, *, copies: int = 1, dtype_bytes: int = 2,
-                fused: bool = False) -> float:
+                fused: bool = False, replica_bytes: float = 0.0) -> float:
     """Eq. (8): the max per-GPU received-token count that still fits.
 
     Under the fused expert leg the per-token denominator loses the 2h
     dispatch-buffer term, so s'_max grows by (1 + h/g_e) — the model-level
-    statement of why fusion lets MACT pick coarser chunking (Eq. 9)."""
-    budget = hw.alpha * hw.hbm_bytes - static - copies * shared_act_bytes(
-        dims, s, par, dtype_bytes)
+    statement of why fusion lets MACT pick coarser chunking (Eq. 9).
+
+    ``replica_bytes`` (the hot-expert replica weight term) comes off the
+    budget like any other static cost — replication trades a little weight
+    memory for a lower observed s'' per peer, and both sides of that trade
+    are priced here (docs/DESIGN.md §Placement)."""
+    budget = (hw.alpha * hw.hbm_bytes - static - replica_bytes
+              - copies * shared_act_bytes(dims, s, par, dtype_bytes))
     denom = (copies * dtype_bytes * par.b * _moe_per_token(dims, fused)
              / (par.t * par.c))
     return budget / denom
@@ -339,7 +363,8 @@ def serve_act_bytes(dims: LayerDims, tokens: int, cfg: Optional[ModelConfig] = N
 def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
                        decode_tokens: int, prefill_tokens: int = 0,
                        dtype_bytes: int = 2,
-                       weight_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+                       weight_bytes: float = WEIGHT_ONLY_BYTES,
+                       replica_weight_bytes: float = 0.0) -> float:
     """Modeled peak serving memory with ``requests`` admitted requests:
     weights + per-request caches + the worse of the decode wave and the
     interleaved prefill chunk (they never run concurrently — the scheduler
@@ -350,12 +375,16 @@ def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
     dropless s' = e_n * decode_tokens at the full slot-map width even for
     near-empty pools, overstating the decode term past the prefill chunk's
     (the true per-wave max at low occupancy — regression-pinned in
-    tests/test_paging.py)."""
+    tests/test_paging.py).
+
+    ``replica_weight_bytes`` is the static cost of the engine-build expert
+    placement's replica slots (docs/DESIGN.md §Placement) — the serving
+    analogue of the training-side budget cut in ``s_prime_max``."""
     dims = LayerDims.from_config(cfg)
     act = max(serve_act_bytes(dims, min(decode_tokens, requests), cfg,
                               dtype_bytes),
               serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
-    return (serve_weight_bytes(cfg, weight_bytes)
+    return (serve_weight_bytes(cfg, weight_bytes) + replica_weight_bytes
             + requests * decode_cache_bytes(cfg, cache_len, dtype_bytes)
             + act)
 
@@ -368,7 +397,8 @@ def serving_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:
 def serving_paged_peak_bytes(cfg: ModelConfig, *, page_bytes: float,
                              decode_tokens: int, prefill_tokens: int = 0,
                              dtype_bytes: int = 2,
-                             weight_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+                             weight_bytes: float = WEIGHT_ONLY_BYTES,
+                             replica_weight_bytes: float = 0.0) -> float:
     """Paged-serving form of Eq. (3) (docs/DESIGN.md §Paging): the cache
     term counts ``page_bytes`` — bytes of pages *actually allocated* (or
     reserved: the scheduler passes allocated + outstanding worst-case
@@ -379,7 +409,8 @@ def serving_paged_peak_bytes(cfg: ModelConfig, *, page_bytes: float,
     dims = LayerDims.from_config(cfg)
     act = max(serve_act_bytes(dims, decode_tokens, cfg, dtype_bytes),
               serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
-    return serve_weight_bytes(cfg, weight_bytes) + page_bytes + act
+    return (serve_weight_bytes(cfg, weight_bytes) + replica_weight_bytes
+            + page_bytes + act)
 
 
 def serving_paged_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:

@@ -57,6 +57,14 @@ class DistContext:
                                            # layer order; overrides moe_chunks/
                                            # pipeline_chunks per layer
                                            # (docs/DESIGN.md §Adaptive)
+    placement: Optional[object] = None     # PlacementSpec for THIS layer's EP
+                                           # expert->peer map + replicas
+                                           # (core/placement.py); None =
+                                           # identity contiguous mapping
+    placements: Optional[tuple] = None     # one PlacementSpec per MoE layer,
+                                           # resolved to ``placement`` by
+                                           # blocks.layer_ctx
+                                           # (docs/DESIGN.md §Placement)
     act_pspec: Optional[object] = None     # PartitionSpec for (B, S, d) activations
     logits_pspec: Optional[object] = None  # PartitionSpec for (B, S, V) logits
     heads_pspec: Optional[object] = None   # PartitionSpec for (B, S, H, hd) q/k/v
@@ -213,7 +221,8 @@ def moe_ffn(params: dict, x: jax.Array, cfg: MoEConfig, ctx: DistContext):
                               ragged=ctx.moe_ragged,
                               pipeline=ctx.pipeline_chunks,
                               ragged_block=ctx.ragged_block,
-                              fused=ctx.moe_fused)
+                              fused=ctx.moe_fused,
+                              placement=ctx.placement)
         stats = dict(stats)
         stats["aux_loss"] = stats["aux_loss"] / ctx.moe_chunks
     elif strategy == "tp_gspmd":

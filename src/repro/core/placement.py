@@ -1,0 +1,289 @@
+"""Telemetry-driven expert placement + hot-expert replication.
+
+MemFine schedules *around* routing skew (FCDA chunking + recompute depth);
+this module *moves* the work instead (docs/DESIGN.md §Placement).  The
+per-layer per-expert EMA that ``core/telemetry.py`` already tracks feeds a
+greedy LPT assignment (MicroMoE, arXiv 2511.16947) that maps experts to EP
+peers, plus replication of persistently hot experts across peers with a
+deterministic load-split at routing time (MoETuner, arXiv 2502.06643).
+
+The representation is *slot-based*: each EP peer owns ``slots_per_peer =
+e_local + replicas`` expert-weight slots, and ``slot_to_expert`` (peer-major)
+says which expert's weights live in each slot.  A replicated expert occupies
+one slot on several peers (never two on the same peer).  The dispatch path
+then runs the existing single-sort ``UnifiedPlan`` machinery over *slot ids*
+instead of expert ids — the planner is group-id agnostic, so the plan stays
+single-sort and the combine stays transpose-symmetric.  The identity spec is
+detected and skipped entirely, so an identity ``PlacementSpec`` is bitwise
+identical to the unplaced path.
+
+Everything here is tiny host-side numpy; the only traced op is
+``place_expert_idx`` (a constant-table gather).
+"""
+
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Optional, Sequence, Tuple
+
+import numpy as np
+
+#: cap on the load-split modulus (lcm of replica counts); beyond this the
+#: round-robin split is approximate-even instead of exact-even
+MAX_SPLIT_MOD = 2520
+
+
+class PlacementSpec(NamedTuple):
+    """Expert -> (peer, slot) assignment for one MoE layer.
+
+    ``slot_to_expert`` is peer-major: slot ``s`` lives on peer
+    ``s // slots_per_peer`` and holds the weights of expert
+    ``slot_to_expert[s]``.  Hashable (NamedTuple of ints/tuples) so it can
+    sit in ``DistContext`` and key the trainer's compiled-step LRU cache.
+    """
+    num_experts: int
+    num_peers: int
+    slot_to_expert: Tuple[int, ...]
+
+    # -- shape -----------------------------------------------------------------
+    @property
+    def total_slots(self) -> int:
+        return len(self.slot_to_expert)
+
+    @property
+    def slots_per_peer(self) -> int:
+        return self.total_slots // self.num_peers
+
+    @property
+    def replica_slots(self) -> int:
+        """Extra weight slots per peer beyond the identity e_local."""
+        return self.slots_per_peer - self.num_experts // self.num_peers
+
+    @property
+    def is_identity(self) -> bool:
+        return (self.total_slots == self.num_experts
+                and self.slot_to_expert == tuple(range(self.num_experts)))
+
+    @classmethod
+    def identity(cls, num_experts: int, num_peers: int) -> "PlacementSpec":
+        """The hardcoded contiguous mapping (expert e on peer e // e_local)."""
+        if num_experts % num_peers:
+            raise ValueError(f"E={num_experts} not divisible by P={num_peers}")
+        return cls(num_experts, num_peers, tuple(range(num_experts)))
+
+    def validate(self) -> None:
+        E, P, s2e = self.num_experts, self.num_peers, self.slot_to_expert
+        if len(s2e) % P:
+            raise ValueError(f"{len(s2e)} slots not divisible by {P} peers")
+        spp = len(s2e) // P
+        if spp < E // P:
+            raise ValueError("fewer slots per peer than e_local")
+        seen = set()
+        for p in range(P):
+            block = s2e[p * spp:(p + 1) * spp]
+            if len(set(block)) != spp:
+                raise ValueError(f"peer {p} hosts a duplicate expert: {block}")
+            seen.update(block)
+        if seen != set(range(E)):
+            raise ValueError(f"experts {set(range(E)) - seen} unplaced")
+
+    # -- derived tables (host-side numpy, constant-folded under jit) -----------
+    def replica_counts(self) -> np.ndarray:
+        """(E,) number of slots hosting each expert (>= 1)."""
+        return np.bincount(np.asarray(self.slot_to_expert),
+                           minlength=self.num_experts).astype(np.int64)
+
+    def expert_slot_table(self) -> np.ndarray:
+        """(E, R) int32: row e lists expert e's slots round-robin.
+
+        R is the lcm of the replica counts (capped at MAX_SPLIT_MOD), so each
+        replica appears equally often per row and the token-index-parity split
+        ``table[e, pos % R]`` is exactly even (approximate beyond the cap).
+        """
+        counts = self.replica_counts()
+        R = 1
+        for c in sorted(set(int(c) for c in counts)):
+            R = R * c // math.gcd(R, c)
+            if R >= MAX_SPLIT_MOD:
+                R = MAX_SPLIT_MOD
+                break
+        slots_of = [[] for _ in range(self.num_experts)]
+        for s, e in enumerate(self.slot_to_expert):
+            slots_of[e].append(s)
+        table = np.empty((self.num_experts, R), dtype=np.int32)
+        for e, slots in enumerate(slots_of):
+            table[e] = [slots[i % len(slots)] for i in range(R)]
+        return table
+
+    def peer_loads(self, load) -> np.ndarray:
+        """(P,) predicted per-peer routed load for a (E,) load vector.
+
+        Each expert's load splits evenly across its replicas — the model the
+        solver and ``MACTController.observed_s_pp`` price; the runtime parity
+        split matches it up to the MAX_SPLIT_MOD cap.
+        """
+        load = np.asarray(load, dtype=np.float64).reshape(-1)
+        if load.size != self.num_experts:
+            raise ValueError(
+                f"load of size {load.size}, expected {self.num_experts}")
+        share = load / self.replica_counts()
+        s2e = np.asarray(self.slot_to_expert)
+        return share[s2e].reshape(self.num_peers, self.slots_per_peer).sum(1)
+
+
+def bottleneck(spec: PlacementSpec, load) -> float:
+    """Hottest-peer predicted load — the quantity LPT minimises."""
+    return float(spec.peer_loads(load).max())
+
+
+def plan_placement(load, num_peers: int, *, replicas: int = 0
+                   ) -> PlacementSpec:
+    """Greedy LPT assignment + hot-expert replication for one layer.
+
+    Pass 1 (LPT): experts in descending load order, each to the least-loaded
+    peer with a free CANONICAL slot (the ``replicas`` extra slots per peer
+    are reserved — letting LPT pack cold experts into them starves the
+    replication pass of exactly the peers a hot expert should split onto).
+    Pass 2 (replication): repeatedly replicate the hottest-share expert onto
+    its least-loaded non-hosting peer, committing only moves that improve
+    the sorted per-peer load vector lexicographically (a hot column split
+    across two equally-hot peers improves the SECOND-highest load before it
+    moves the max, so plain bottleneck-only greedy would stall).  When no
+    replication helps, remaining reserved slots are padded with each peer's
+    coldest absent expert — a cold replica adds (almost) no load but keeps
+    every peer at the uniform ``slots_per_peer`` the dispatch shape needs.
+    """
+    load = np.asarray(load, dtype=np.float64).reshape(-1)
+    E = load.size
+    if num_peers <= 0 or E % num_peers:
+        raise ValueError(f"E={E} not divisible by P={num_peers}")
+    e_local = E // num_peers
+    spp = e_local + replicas
+    if replicas < 0 or spp > E:
+        raise ValueError(f"replicas={replicas} out of range for E={E}, "
+                         f"P={num_peers}")
+    peer_slots: list[list[int]] = [[] for _ in range(num_peers)]
+    peer_load = np.zeros(num_peers)
+    for e in np.argsort(-load, kind="stable"):
+        p = min((p for p in range(num_peers) if len(peer_slots[p]) < e_local),
+                key=lambda p: (peer_load[p], p))
+        peer_slots[p].append(int(e))
+        peer_load[p] += load[e]
+    counts = np.ones(E)
+
+    def peer_loads_now() -> np.ndarray:
+        share = load / counts
+        return np.array([share[s].sum() for s in peer_slots])
+
+    while any(len(s) < spp for s in peer_slots):
+        share = load / counts
+        pl = peer_loads_now()
+        before = tuple(sorted(pl, reverse=True))
+        committed = False
+        for e in np.argsort(-share, kind="stable"):
+            e = int(e)
+            cands = [p for p in range(num_peers)
+                     if len(peer_slots[p]) < spp and e not in peer_slots[p]]
+            if not cands:
+                continue
+            p = min(cands, key=lambda p: (pl[p], p))
+            peer_slots[p].append(e)
+            counts[e] += 1
+            if tuple(sorted(peer_loads_now(), reverse=True)) < before:
+                committed = True
+                break
+            peer_slots[p].pop()
+            counts[e] -= 1
+        if not committed:
+            for p in range(num_peers):
+                while len(peer_slots[p]) < spp:
+                    share = load / counts
+                    cold = min((e for e in range(E)
+                                if e not in peer_slots[p]),
+                               key=lambda e: (share[e], e))
+                    peer_slots[p].append(cold)
+                    counts[cold] += 1
+            break
+    # canonical within-peer order (sorted by expert id) so equal assignments
+    # compare equal across replans — the hysteresis band depends on it
+    s2e = tuple(e for p in range(num_peers) for e in sorted(peer_slots[p]))
+    spec = PlacementSpec(E, num_peers, s2e)
+    spec.validate()
+    return spec
+
+
+def choose_placements(loads, num_layers: int, num_peers: int, *,
+                      num_experts: Optional[int] = None, replicas: int = 0,
+                      current: Optional[Sequence[PlacementSpec]] = None,
+                      hysteresis: float = 0.1
+                      ) -> Tuple[PlacementSpec, ...]:
+    """Per-MoE-layer placement vector with a MACT-style hysteresis band.
+
+    ``loads`` is the telemetry ``(L_moe, E)`` EMA (None -> identity for every
+    layer; ``num_experts`` then sizes the identity specs).  A layer switches
+    away from its incumbent only when the candidate's predicted bottleneck
+    beats the incumbent's by more than the hysteresis fraction — same
+    anti-flapping rule as ``MACTController.choose_layer_schedules``.
+    """
+    if loads is None:
+        if num_experts is None:
+            raise ValueError("num_experts required when loads is None")
+        ident = PlacementSpec.identity(num_experts, num_peers)
+        return tuple(current) if current is not None else (ident,) * num_layers
+    loads = np.asarray(loads, dtype=np.float64)
+    if loads.ndim != 2 or loads.shape[0] != num_layers:
+        raise ValueError(f"loads of shape {loads.shape}, expected "
+                         f"({num_layers}, E)")
+    E = loads.shape[1]
+    ident = PlacementSpec.identity(E, num_peers)
+    out = []
+    for i in range(num_layers):
+        row = loads[i]
+        inc = current[i] if current is not None else ident
+        cand = plan_placement(row, num_peers, replicas=replicas)
+        if bottleneck(cand, row) * (1.0 + hysteresis) < bottleneck(inc, row):
+            out.append(cand)
+        else:
+            out.append(inc)
+    return tuple(out)
+
+
+def migrated_slots(old: Optional[PlacementSpec], new: PlacementSpec) -> int:
+    """Weight slots whose resident expert changes old -> new.
+
+    This is what the replan-boundary all-to-all moves: each changed slot
+    receives one expert's parameter slice from whichever peer holds it.
+    ``old=None`` means the identity layout (the cold-start weight placement),
+    so adopting identity at cold start moves nothing.  Slots are compared by
+    (peer, offset); a slot with no predecessor (replica slots just carved
+    out) always counts as moved.
+    """
+    if old is None:
+        old = PlacementSpec.identity(new.num_experts, new.num_peers)
+    if old.num_peers != new.num_peers:
+        return new.total_slots
+    spp_o, spp_n = old.slots_per_peer, new.slots_per_peer
+    moved = 0
+    for p in range(new.num_peers):
+        for o in range(spp_n):
+            prev = old.slot_to_expert[p * spp_o + o] if o < spp_o else None
+            moved += new.slot_to_expert[p * spp_n + o] != prev
+    return moved
+
+
+def place_expert_idx(expert_idx, spec: PlacementSpec):
+    """Map routed expert ids (T, K) -> weight-slot ids, load-splitting
+    replicas by token-index parity.
+
+    Deterministic at trace time: slot = table[e, flat_pos % R].  With R the
+    lcm of the replica counts, consecutive token-slots round-robin across an
+    expert's replicas, so the split is even regardless of routing order.
+    Identity specs short-circuit (bitwise-identical to the unplaced path).
+    """
+    if spec is None or spec.is_identity:
+        return expert_idx
+    import jax.numpy as jnp  # traced path only; keep module import-light
+    table = jnp.asarray(spec.expert_slot_table())
+    t, k = expert_idx.shape
+    pos = jnp.arange(t * k, dtype=jnp.int32).reshape(t, k)
+    return table[expert_idx, pos % table.shape[1]]

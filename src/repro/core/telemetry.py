@@ -54,6 +54,19 @@ class LoadTelemetry:
         """(L_moe, E) EMA load matrix, or None before the first update."""
         return None if self._ema is None else self._ema.copy()
 
+    def imbalance(self) -> Optional[np.ndarray]:
+        """(L_moe,) per-layer max/mean ratio of the EMA (1.0 = balanced).
+
+        The signal the placement hysteresis gates on (core/placement.py) and
+        the trainer surfaces in its per-replan log line; None before the
+        first update.  All-zero layers report 1.0 (nothing to balance).
+        """
+        if self._ema is None:
+            return None
+        mean = self._ema.mean(axis=1)
+        peak = self._ema.max(axis=1)
+        return np.where(mean > 0.0, peak / np.maximum(mean, 1e-30), 1.0)
+
     def reset(self) -> None:
         self._ema = None
         self.steps = 0
@@ -67,11 +80,14 @@ class LoadTelemetry:
                 "ema": None if self._ema is None else self._ema.tolist()}
 
     def load_state_dict(self, state: dict) -> None:
-        self.steps = int(state.get("steps", 0))
+        # validate BEFORE assigning: a failed restore must leave the live
+        # EMA/steps untouched (the trainer keeps planning from the warm view)
         ema = state.get("ema")
-        self._ema = None if ema is None else np.asarray(ema, dtype=np.float64)
-        if self._ema is not None and self._ema.shape != (self.num_layers,
-                                                         self.num_experts):
+        restored = None if ema is None else np.asarray(ema, dtype=np.float64)
+        if restored is not None and restored.shape != (self.num_layers,
+                                                       self.num_experts):
             raise ValueError(
-                f"restored telemetry EMA of shape {self._ema.shape}, expected "
+                f"restored telemetry EMA of shape {restored.shape}, expected "
                 f"({self.num_layers}, {self.num_experts})")
+        self.steps = int(state.get("steps", 0))
+        self._ema = restored

@@ -74,6 +74,17 @@ def main() -> None:
     ap.add_argument("--preemption", action="store_true",
                     help="spill low-priority residents to host when "
                          "admission is refused (requires --page-size)")
+    ap.add_argument("--placement-peers", type=int, default=0,
+                    help="choose a static expert placement over this many EP "
+                         "peers at engine build, from --placement-loads "
+                         "(docs/DESIGN.md §Placement); 0 = identity")
+    ap.add_argument("--placement-loads", default=None,
+                    help="JSON file with a (L_moe, E) load matrix (e.g. a "
+                         "training run's telemetry EMA) the placement is "
+                         "solved from; omitted = identity")
+    ap.add_argument("--placement-replicas", type=int, default=0,
+                    help="extra hot-expert weight slots per peer; their "
+                         "weight bytes are priced by admission control")
     ap.add_argument("--inject", default=None,
                     help="chaos faults on scheduler steps, e.g. 'oom@20' "
                          "(faulted decode waves requeue accepted requests)")
@@ -95,6 +106,18 @@ def main() -> None:
     if args.smoke:
         cfg = cfg.reduced()
     ctx = DistContext()
+    replica_bytes = 0.0
+    if args.placement_peers:
+        import json as _json
+
+        from repro.serving.engine import build_placements
+        loads = None
+        if args.placement_loads:
+            with open(args.placement_loads) as f:
+                loads = np.asarray(_json.load(f), dtype=np.float64)
+        ctx, replica_bytes = build_placements(
+            cfg, ctx, args.placement_peers, loads=loads,
+            replicas=args.placement_replicas)
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
 
     rng = np.random.default_rng(args.seed)
@@ -119,7 +142,8 @@ def main() -> None:
                        max_waiting=args.max_waiting,
                        page_size=args.page_size,
                        prefix_cache=args.prefix_cache,
-                       preemption=args.preemption)
+                       preemption=args.preemption,
+                       replica_weight_bytes=replica_bytes)
 
     injector = None
     if args.inject:
@@ -136,6 +160,11 @@ def main() -> None:
                                             injector=injector)
     mode = (f"paged(page={args.page_size}, prefix={args.prefix_cache}, "
             f"preempt={args.preemption})" if args.page_size else "slot-map")
+    if args.placement_peers and ctx.placements is not None:
+        placed = sum(1 for p in ctx.placements if not p.is_identity)
+        print(f"placement: {placed}/{len(ctx.placements)} layers re-homed "
+              f"over {args.placement_peers} peers, replica weights "
+              f"{replica_bytes / 1e9:.3f} GB priced by admission")
     print(f"serving {cfg.name}: {args.requests} requests, "
           f"rate={args.arrival_rate}/s, slots={args.max_slots}, "
           f"cache_len={cache_len}, prefill_chunk={args.prefill_chunk}, "

@@ -45,6 +45,16 @@ def main() -> None:
                     help="plan each layer for (1+this)*EMA load — the margin "
                          "that keeps a drifting layer's schedule ahead of "
                          "its load between re-plans")
+    ap.add_argument("--placement", action="store_true",
+                    help="telemetry-driven expert placement: re-home (and "
+                         "with --placement-replicas, replicate) experts "
+                         "across EP peers at replan boundaries "
+                         "(docs/DESIGN.md §Placement)")
+    ap.add_argument("--placement-replicas", type=int, default=0,
+                    help="extra hot-expert weight slots per EP peer")
+    ap.add_argument("--placement-hysteresis", type=float, default=0.1,
+                    help="min fractional bottleneck improvement before a "
+                         "layer's placement moves (anti-flapping)")
     ap.add_argument("--remat", default=None, choices=["none", "full", "memfine"])
     ap.add_argument("--mesh", default="local", choices=["local", "prod", "prod-mp"])
     ap.add_argument("--use-pallas", action="store_true")
@@ -95,6 +105,9 @@ def main() -> None:
                       replan_interval=args.replan_interval,
                       mact_hysteresis=args.mact_hysteresis,
                       mact_headroom=args.mact_headroom,
+                      use_placement=args.placement,
+                      placement_replicas=args.placement_replicas,
+                      placement_hysteresis=args.placement_hysteresis,
                       checkpoint_dir=args.checkpoint_dir,
                       checkpoint_every=args.checkpoint_every,
                       resume=args.resume,
@@ -115,6 +128,13 @@ def main() -> None:
     else:
         print(f"nothing to do: checkpoint already at step {int(state.step)} "
               f">= target {args.steps}")
+    if args.placement and trainer.placement_trace:
+        last = trainer.placement_trace[-1]
+        imb = last["imbalance"]
+        print(f"placement: {len(trainer.placement_trace)} replan(s), last "
+              f"moved {last['migrated_slots']} slots "
+              f"({last['migrated_bytes'] / 2**20:.1f} MiB), imbalance "
+              f"{'n/a' if imb is None else f'{max(imb):.2f}'}")
     if args.adaptive_mact and trainer.schedule_trace:
         last = trainer.schedule_trace[-1]
         print(f"adaptive layer schedules (last plan): "

@@ -39,16 +39,23 @@ def layer_ctx(ctx: DistContext, moe_index: Optional[int]) -> DistContext:
 
     With a heterogeneous schedule vector (``ctx.layer_schedules``, adaptive
     MACT — docs/DESIGN.md §Adaptive) the layer at MoE position ``moe_index``
-    gets its own (chunk bin, pipeline depth); otherwise the global schedule
-    applies unchanged.  The returned ctx drops ``layer_schedules`` so the
-    MoE layer below sees exactly the static knobs it always did.
+    gets its own (chunk bin, pipeline depth), and with a placement vector
+    (``ctx.placements``, docs/DESIGN.md §Placement) its own expert->peer
+    map; otherwise the global knobs apply unchanged.  The returned ctx drops
+    the per-layer vectors so the MoE layer below sees exactly the static
+    knobs it always did.
     """
-    if ctx.layer_schedules is None or moe_index is None:
+    if moe_index is None or (ctx.layer_schedules is None
+                             and ctx.placements is None):
         return ctx
-    spec = ScheduleSpec(*ctx.layer_schedules[moe_index])
-    return dataclasses.replace(ctx, moe_chunks=spec.chunks,
-                               pipeline_chunks=spec.depth,
-                               layer_schedules=None)
+    changes: dict = {}
+    if ctx.layer_schedules is not None:
+        spec = ScheduleSpec(*ctx.layer_schedules[moe_index])
+        changes.update(moe_chunks=spec.chunks, pipeline_chunks=spec.depth,
+                       layer_schedules=None)
+    if ctx.placements is not None:
+        changes.update(placement=ctx.placements[moe_index], placements=None)
+    return dataclasses.replace(ctx, **changes)
 
 
 # ---------------------------------------------------------------------------

@@ -155,12 +155,14 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict, *,
     return becomes (logits, stats, cache).  ``cache_len`` sizes the caches
     (default: the prompt length); linear caches require cache_len >= S.
     """
-    if ctx.layer_schedules is not None:
-        want = num_moe_layers(cfg)
-        if len(ctx.layer_schedules) != want:
-            raise ValueError(
-                f"layer_schedules has {len(ctx.layer_schedules)} entries, "
-                f"config {cfg.name!r} has {want} MoE layers")
+    for name in ("layer_schedules", "placements"):
+        vec = getattr(ctx, name)
+        if vec is not None:
+            want = num_moe_layers(cfg)
+            if len(vec) != want:
+                raise ValueError(
+                    f"{name} has {len(vec)} entries, "
+                    f"config {cfg.name!r} has {want} MoE layers")
     enc_out = None
     if cfg.encoder_layers:
         enc_out = encode(params, cfg, batch["frames"], ctx)
@@ -201,10 +203,14 @@ def forward(params: dict, cfg: ModelConfig, ctx: DistContext, batch: dict, *,
         np_ = cfg.num_periods
         n_moe_pat = sum(1 for s in pattern if s.ffn == "moe")
         sched = ctx.layer_schedules
-        uniform = sched is None or all(
+        plac = ctx.placements
+        uniform = (sched is None or all(
             len({tuple(sched[moe_idx + p * n_moe_pat + m])
                  for p in range(np_)}) == 1
-            for m in range(n_moe_pat))
+            for m in range(n_moe_pat))) and (plac is None or all(
+                len({plac[moe_idx + p * n_moe_pat + m]
+                     for p in range(np_)}) == 1
+                for m in range(n_moe_pat)))
 
         if uniform:
             # one trace serves every period: resolve each pattern position's

@@ -37,6 +37,40 @@ def init_serve_cache(params: dict, cfg: ModelConfig, batch: int, seq_len: int,
                                   enc_out=enc_out)
 
 
+def build_placements(cfg: ModelConfig, ctx: DistContext, num_peers: int, *,
+                     loads=None, replicas: int = 0):
+    """Static expert placement chosen at engine build (docs/DESIGN.md
+    §Placement).
+
+    Serving never replans — weights are loaded once, so the placement is
+    resolved here from an offline/warmup load profile (``loads``: a
+    ``(L_moe, E)`` matrix, e.g. a training run's telemetry EMA; None means
+    identity) and baked into the ctx every compiled step is traced under.
+    Returns ``(ctx with per-layer placements, replica_weight_bytes)`` — the
+    second element is what ``ServeConfig.replica_weight_bytes`` should carry
+    so admission control prices the replica slots
+    (core/memory_model.py::serving_peak_bytes).
+    """
+    import dataclasses
+
+    from repro.core import memory_model as mm
+    from repro.core import placement as plc
+
+    n_moe = transformer.num_moe_layers(cfg)
+    if cfg.moe is None or n_moe == 0 or num_peers <= 1 \
+            or cfg.moe.num_experts % num_peers:
+        return ctx, 0.0
+    placements = plc.choose_placements(
+        loads, n_moe, num_peers, num_experts=cfg.moe.num_experts,
+        replicas=replicas, hysteresis=0.0)
+    extra_slots = max(p.replica_slots for p in placements)
+    replica_bytes = mm.replica_weight_bytes(
+        cfg, extra_slots, mm.Parallelism(e=num_peers))
+    if all(p.is_identity for p in placements):
+        return ctx, 0.0
+    return dataclasses.replace(ctx, placements=placements), replica_bytes
+
+
 def make_serve_step(cfg: ModelConfig, ctx: DistContext):
     """Returns step(params, cache, tokens (B,1)) -> (logits, new_cache)."""
 

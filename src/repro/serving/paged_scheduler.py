@@ -123,7 +123,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
             self.cfg, page_bytes=self._page_bytes_now(),
             decode_tokens=min(s.max_slots, occ),
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
-            weight_bytes=s.weight_bytes)
+            weight_bytes=s.weight_bytes,
+            replica_weight_bytes=s.replica_weight_bytes)
 
     def _fits_extra(self, extra_bytes: float, occ_after: int) -> bool:
         s = self.scfg
@@ -131,7 +132,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
             self.cfg, s.hw, page_bytes=self._page_bytes_now(extra_bytes),
             decode_tokens=min(s.max_slots, occ_after),
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
-            weight_bytes=s.weight_bytes)
+            weight_bytes=s.weight_bytes,
+            replica_weight_bytes=s.replica_weight_bytes)
 
     # -- intake --------------------------------------------------------------
 
@@ -146,7 +148,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
         if not mm.serving_paged_fits(
                 self.cfg, s.hw, page_bytes=wc, decode_tokens=1,
                 prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
-                weight_bytes=s.weight_bytes):
+                weight_bytes=s.weight_bytes,
+                replica_weight_bytes=s.replica_weight_bytes):
             raise ValueError(
                 f"request {req.rid} can never be admitted: its worst-case "
                 f"pages ({wc / 1e9:.2f} GB) plus weights exceed "

@@ -110,6 +110,10 @@ class ServeConfig:
     prefix_cache: bool = False          # trie-shared prompt prefixes
     preemption: bool = False            # spill low-priority residents under
                                         # admission pressure
+    replica_weight_bytes: float = 0.0   # static cost of the engine-build
+                                        # expert placement's replica slots
+                                        # (docs/DESIGN.md §Placement); priced
+                                        # by admission like any weight bytes
 
 
 class ContinuousBatchingScheduler:
@@ -179,14 +183,16 @@ class ContinuousBatchingScheduler:
             self.cfg, requests=self.occupancy() if requests is None else requests,
             cache_len=s.cache_len, decode_tokens=s.max_slots,
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
-            weight_bytes=s.weight_bytes)
+            weight_bytes=s.weight_bytes,
+            replica_weight_bytes=s.replica_weight_bytes)
 
     def _admissible(self, requests: int) -> bool:
         s = self.scfg
         return mm.serving_fits(
             self.cfg, s.hw, requests=requests, cache_len=s.cache_len,
             decode_tokens=s.max_slots, prefill_tokens=s.prefill_chunk,
-            dtype_bytes=s.dtype_bytes, weight_bytes=s.weight_bytes)
+            dtype_bytes=s.dtype_bytes, weight_bytes=s.weight_bytes,
+            replica_weight_bytes=s.replica_weight_bytes)
 
     # -- request intake -----------------------------------------------------
 

@@ -47,6 +47,8 @@ from repro.core.chunking import ScheduleSpec
 from repro.core.mact import MACTController
 from repro.core.memory_model import Parallelism
 from repro.core.moe import DistContext
+from repro.core import placement as plc
+from repro.core.placement import PlacementSpec
 from repro.core.telemetry import LoadTelemetry
 from repro.data.pipeline import SyntheticLMData
 from repro.models.transformer import num_moe_layers
@@ -78,6 +80,14 @@ class Trainer:
                                          # drift a plan must survive between
                                          # re-plans (EMA lag + replan_interval)
     telemetry_decay: float = 0.6         # per-layer load EMA retention
+    use_placement: bool = False          # telemetry-driven expert placement:
+                                         # re-home/replicate experts at replan
+                                         # boundaries (docs/DESIGN.md
+                                         # §Placement)
+    placement_replicas: int = 0          # extra hot-expert weight slots per
+                                         # EP peer (0 = pure permutation)
+    placement_hysteresis: float = 0.1    # min fractional bottleneck gain
+                                         # before a layer's placement moves
     max_compiled_steps: int = 8          # LRU bound on cached compiled steps
     checkpoint_dir: Optional[str] = None
     checkpoint_every: int = 0
@@ -92,6 +102,8 @@ class Trainer:
     chunk_trace: list = field(default_factory=list)
     pipeline_trace: list = field(default_factory=list)
     schedule_trace: list = field(default_factory=list)  # adaptive: full vectors
+    placement_trace: list = field(default_factory=list)  # per-replan records:
+                                         # imbalance, slots migrated, bytes
 
     def __post_init__(self):
         if self.par is None:
@@ -106,7 +118,9 @@ class Trainer:
                                    b=max(1, self.global_batch // data))
         self.mact = MACTController(
             self.cfg, self.par, self.hw, self.seq_len, bins=self.mact_bins,
-            static_override=self.static_override, fused=self.ctx.moe_fused)
+            static_override=self.static_override, fused=self.ctx.moe_fused,
+            replica_slots=(self.placement_replicas if self.use_placement
+                           else 0))
         self.data = SyntheticLMData(self.cfg, self.seq_len, self.global_batch,
                                     self.seed)
         self._steps: OrderedDict[tuple, object] = OrderedDict()
@@ -117,6 +131,8 @@ class Trainer:
             decay=self.telemetry_decay)
         self._layer_schedules: Optional[tuple] = None
         self._plan_age = 0
+        self._placements: Optional[tuple] = None
+        self._placement_age = 0
         self.compile_count = 0
         self.evicted_recompile_count = 0
         self._evicted_keys: set = set()
@@ -140,20 +156,30 @@ class Trainer:
         if key in self._steps:
             self._steps.move_to_end(key)
             return self._steps[key]
+        # placement-composite key: (schedule_key, placements vector).  The
+        # schedule half keeps its exact historical form so placement-off runs
+        # reuse the same cache keys (and the same compiled steps) as before.
+        sched_key, placements = key, None
+        if (len(key) == 2 and isinstance(key[1], tuple) and key[1]
+                and isinstance(key[1][0], PlacementSpec)):
+            sched_key, placements = key
         cfg = self.cfg
-        if key and key[0] == FULL_REMAT:             # ladder floor: largest
+        if sched_key and sched_key[0] == FULL_REMAT:  # ladder floor: largest
             cfg = dataclasses.replace(self.cfg, remat_policy="full")
-            ctx = dataclasses.replace(self.ctx, moe_chunks=key[1],
+            ctx = dataclasses.replace(self.ctx, moe_chunks=sched_key[1],
                                       pipeline_chunks=1,
                                       layer_schedules=None)
-        elif key and isinstance(key[0], tuple):      # per-layer vector
+        elif sched_key and isinstance(sched_key[0], tuple):  # per-layer vector
             ctx = dataclasses.replace(
-                self.ctx, layer_schedules=tuple(ScheduleSpec(*s) for s in key))
+                self.ctx,
+                layer_schedules=tuple(ScheduleSpec(*s) for s in sched_key))
         else:
             # clear any caller-supplied vector: the global key IS the schedule
-            ctx = dataclasses.replace(self.ctx, moe_chunks=key[0],
-                                      pipeline_chunks=key[1],
+            ctx = dataclasses.replace(self.ctx, moe_chunks=sched_key[0],
+                                      pipeline_chunks=sched_key[1],
                                       layer_schedules=None)
+        if placements is not None:
+            ctx = dataclasses.replace(ctx, placements=placements)
         fn = jax.jit(make_train_step(cfg, ctx, lr=self.lr))
         self._steps[key] = fn
         self.compile_count += 1
@@ -212,10 +238,65 @@ class Trainer:
                 self.telemetry.loads, self._n_moe, ep_size=ep_view,
                 max_depth=max_depth, current=self._layer_schedules,
                 hysteresis=self.mact_hysteresis,
-                headroom=self.mact_headroom)
+                headroom=self.mact_headroom,
+                placements=self._placements)
             self._plan_age = 0
         self._plan_age += 1
         return self._layer_schedules
+
+    # -- expert placement (docs/DESIGN.md §Placement) --------------------------
+    def _placement_peers(self) -> int:
+        """EP peers the placement maps over: the real mesh group when one
+        exists, else the MACT planning view (lets single-device runs plan —
+        and price — placements the same way they plan schedules)."""
+        if self.ctx.mesh is not None:
+            return max(self.par.e, 1)
+        return self.mact_ep_view or max(self.par.e, 1)
+
+    def choose_placements(self) -> Optional[tuple]:
+        """Per-MoE-layer PlacementSpec vector, re-planned from the telemetry
+        EMA at the same ``replan_interval`` cadence as the schedules (the
+        placement replan runs FIRST so MACT prices schedules through the new
+        map).  Each replan appends a record to ``placement_trace`` with the
+        per-layer imbalance it acted on and the migration volume (weight
+        slots + bytes the replan boundary's all-to-all moves)."""
+        peers = self._placement_peers()
+        E = self.cfg.moe.num_experts if self.cfg.moe else 0
+        if (not self.use_placement or self._n_moe == 0 or peers <= 1
+                or E % peers):
+            return None
+        if self._placements is None or self._placement_age >= self.replan_interval:
+            old = self._placements
+            self._placements = plc.choose_placements(
+                self.telemetry.loads, self._n_moe, peers, num_experts=E,
+                replicas=self.placement_replicas, current=old,
+                hysteresis=self.placement_hysteresis)
+            self._placement_age = 0
+            moved = sum(
+                plc.migrated_slots(old[j] if old is not None else None,
+                                   self._placements[j])
+                for j in range(self._n_moe)) if old != self._placements else 0
+            imb = self.telemetry.imbalance()
+            slot_bytes = (3 * self.cfg.d_model * self.cfg.moe.d_ff_expert
+                          / self.par.t * 4)          # fp32 training weights
+            self.placement_trace.append({
+                "step": len(self.log),
+                "imbalance": None if imb is None else [float(v) for v in imb],
+                "migrated_slots": int(moved),
+                "migrated_bytes": float(moved * slot_bytes),
+                "identity": all(p.is_identity for p in self._placements),
+            })
+        self._placement_age += 1
+        return self._placements
+
+    def _with_placements(self, sched_key: tuple) -> tuple:
+        """Attach the placement vector to a schedule cache key.  Identity
+        (or disabled) placement keeps the bare schedule key, so those runs
+        share compiled steps with the pre-placement path bit-for-bit."""
+        p = self._placements
+        if p is None or all(s.is_identity for s in p):
+            return sched_key
+        return (sched_key, p)
 
     @staticmethod
     def _vector_key(vec: tuple) -> tuple:
@@ -225,7 +306,12 @@ class Trainer:
         return vec
 
     def _next_schedule_key(self) -> tuple:
-        """The compiled-step cache key for the next step."""
+        """The SCHEDULE half of the compiled-step cache key for the next
+        step (the placement half is attached by ``_with_placements`` inside
+        the attempt, so the OOM ladder escalates over pure schedule keys).
+        The placement replan runs first: MACT then prices each layer's s''
+        through the placement map it will actually run under."""
+        self.choose_placements()
         if (self.adaptive_mact and self.use_mact and self.cfg.moe is not None
                 and self._n_moe > 0):
             return self._vector_key(self.choose_layer_schedules())
@@ -265,7 +351,7 @@ class Trainer:
         if self._audit_args is not None:               # HLO-derived actuals
             try:                                       # (best-effort: the
                 from repro.launch import hlo_analysis  # failed step may not
-                fn = self._compiled(key)               # even lower)
+                fn = self._compiled(self._with_placements(key))  # even lower)
                 text = fn.lower(*self._audit_args).compile().as_text()
                 audit["hlo_hbm_gb"] = (
                     hlo_analysis.analyse_module(text)["hbm_bytes"] / 2**30)
@@ -292,6 +378,11 @@ class Trainer:
                                 else [list(s) for s in self._layer_schedules]),
             "plan_age": self._plan_age,
             "mact_headroom": self.mact_headroom,
+            "placements": (None if self._placements is None
+                           else [[p.num_experts, p.num_peers,
+                                  list(p.slot_to_expert)]
+                                 for p in self._placements]),
+            "placement_age": self._placement_age,
         }
 
     def _apply_extra(self, extra: dict) -> None:
@@ -307,6 +398,11 @@ class Trainer:
         self._plan_age = int(extra.get("plan_age", 0))
         self.mact_headroom = float(extra.get("mact_headroom",
                                              self.mact_headroom))
+        if extra.get("placements") is not None:
+            self._placements = tuple(
+                PlacementSpec(int(e), int(p), tuple(int(s) for s in slots))
+                for e, p, slots in extra["placements"])
+        self._placement_age = int(extra.get("placement_age", 0))
 
     def _resume_state(self) -> Optional[TrainState]:
         """Restore the newest VALID checkpoint (corrupt ones are skipped by
@@ -347,7 +443,8 @@ class Trainer:
                 if self.injector is not None:
                     self.injector.maybe_fail_step(_step)   # oom/crash hooks
                     self.injector.maybe_stall(_step)
-                new_state, metrics = self._compiled(k)(_state, _batch)
+                new_state, metrics = self._compiled(
+                    self._with_placements(k))(_state, _batch)
                 loss = float(metrics["loss"])          # sync point: a real
                 return new_state, metrics, loss        # OOM surfaces here
 
@@ -375,14 +472,25 @@ class Trainer:
                    "tgs": tgs, "max_load": float(load.max()),
                    "drops": float(metrics["drops"]),
                    "oom_retries": len(self.guard.escalations) - n_esc}
+            imb = self.telemetry.imbalance()
+            if imb is not None:
+                rec["imbalance"] = float(imb.max())
             self.log.append(rec)
             self.chunk_trace.append(chunks)
             self.pipeline_trace.append(pipeline)
             if self.adaptive_mact and self._layer_schedules is not None:
                 self.schedule_trace.append(self._layer_schedules)
             if verbose:
+                imb_s = (f" imb={rec['imbalance']:.2f}"
+                         if "imbalance" in rec else "")
+                plc_s = ""
+                if (self.placement_trace
+                        and self.placement_trace[-1]["step"] == len(self.log) - 1):
+                    last = self.placement_trace[-1]
+                    plc_s = (f" replan[moved={last['migrated_slots']} slots,"
+                             f" {last['migrated_bytes'] / 2**20:.1f} MiB]")
                 print(f"step {rec['step']:4d} loss {rec['loss']:.4f} "
-                      f"c={chunks} tgs={tgs:,.0f}")
+                      f"c={chunks} tgs={tgs:,.0f}{imb_s}{plc_s}")
             if (self.checkpoint_dir and self.checkpoint_every
                     and int(state.step) % self.checkpoint_every == 0):
                 checkpointing.save(self.checkpoint_dir, int(state.step),
