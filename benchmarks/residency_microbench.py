@@ -1,0 +1,207 @@
+"""Expert-balanced decode waves + expert-weight residency at equal budget.
+
+Two claims from docs/DESIGN.md §Residency, measured on a reduced MoE arch:
+
+* **Wave grouping.**  Decode is bandwidth-bound by *activated expert
+  weights*, so a wave's cost scales with its distinct activated experts.
+  Under a skewed trace (requests cluster into routing families — here,
+  repeated-single-token prompts chosen via the router probe), grouping
+  waves by predicted expert overlap (``expert_batching``) lowers mean
+  distinct activated experts per wave vs FIFO age-order waves of the same
+  size, with bitwise-identical outputs (pinned by tests/test_residency.py).
+* **Residency headroom.**  With only ``resident_experts`` of E expert
+  weights held per layer (cold experts host-offloaded, demand-restored),
+  the serving memory model frees weight bytes that admission converts into
+  resident request caches: the acceptance target is >= 1.3x admitted
+  concurrency at the same budget, zero accepted requests lost, outputs
+  bitwise equal to the never-offloaded scheduler.
+
+Emits CSV lines per repo convention and writes ``BENCH_residency.json``
+(skipped in tiny/CI mode: SERVING_BENCH_TINY=1 or RESIDENCY_BENCH_TINY=1).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+
+ARCH = "mixtral-8x7b"
+EXPERTS = 8                     # keep the full expert table in reduced()
+                                # (top_k=2 of 8: per-request expert sets are
+                                # sparse enough for grouping to matter)
+SLOTS = 8
+WAVE = 2
+PREFILL_CHUNK = 8
+CACHE_LEN = 160
+PROMPT = 8                      # one repeated token id per request
+GEN = 12
+FAMILY = 4                      # requests per routing family (2 families)
+MONO_FIT = 3                    # budget sized to admit ~3 full-weight caches
+RESIDENT = 2                    # resident experts per layer in section B
+
+
+def _family_tokens(params, cfg, ctx):
+    """Two token ids whose probed expert sets overlap least — the seeds of
+    two routing families the wave grouping can separate."""
+    import itertools
+
+    import jax.numpy as jnp
+    import numpy as np
+    from repro.serving import engine
+
+    probe = engine.get_router_probe(cfg, ctx)
+    cand = np.arange(1, min(cfg.vocab_size, 256), dtype=np.int32)
+    counts = np.asarray(probe(params, jnp.asarray(cand)))   # (N, L, E)
+    sets = [frozenset(np.flatnonzero(c.sum(0) > 0)) for c in counts]
+    best = min(itertools.combinations(range(len(cand)), 2),
+               key=lambda ab: (len(sets[ab[0]] & sets[ab[1]]),
+                               -len(sets[ab[0]] ^ sets[ab[1]])))
+    return int(cand[best[0]]), int(cand[best[1]])
+
+
+def _skewed_trace(tok_a, tok_b, n_per_family, gen=GEN):
+    """Interleaved families (rid parity), so FIFO age-order waves mix them
+    while the grouped policy can reunite each family."""
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    out = []
+    for i in range(2 * n_per_family):
+        tok = tok_a if i % 2 == 0 else tok_b
+        out.append(Request(rid=i,
+                           tokens=np.full(PROMPT, tok, np.int32),
+                           max_new_tokens=gen, arrival=0.0))
+    return out
+
+
+def _uniform_trace(rng, n, vocab, gen=GEN):
+    import numpy as np
+    from repro.serving.scheduler import Request
+
+    return [Request(rid=i, tokens=rng.integers(1, vocab, PROMPT)
+                    .astype(np.int32), max_new_tokens=gen, arrival=0.0)
+            for i in range(n)]
+
+
+def _budget(cfg):
+    """Midpoint between MONO_FIT and MONO_FIT+1 FULL-weight residents: the
+    line the residency tier must beat by shedding cold expert bytes."""
+    import dataclasses
+
+    from repro.configs.base import GPU_64G
+    from repro.core import memory_model as mm
+    kw = dict(cache_len=CACHE_LEN, decode_tokens=SLOTS,
+              prefill_tokens=PREFILL_CHUNK, dtype_bytes=2)
+    lo = mm.serving_peak_bytes(cfg, requests=MONO_FIT, **kw)
+    hi = mm.serving_peak_bytes(cfg, requests=MONO_FIT + 1, **kw)
+    return dataclasses.replace(GPU_64G, hbm_bytes=(lo + hi) / 2, alpha=1.0)
+
+
+def run() -> list[str]:
+    import dataclasses
+
+    import jax
+    import numpy as np
+    from repro.configs import get_config
+    from repro.core.moe import DistContext
+    from repro.models import transformer
+    from repro.serving.scheduler import (ContinuousBatchingScheduler,
+                                         ServeConfig)
+
+    tiny = bool(os.environ.get("SERVING_BENCH_TINY")
+                or os.environ.get("RESIDENCY_BENCH_TINY"))
+    per_family = 2 if tiny else FAMILY
+    ctx = DistContext()
+    cfg = get_config(ARCH).reduced(max_experts=EXPERTS)
+    params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    E = cfg.moe.num_experts
+    lines, out = [], {"arch": ARCH, "slots": SLOTS, "wave": WAVE,
+                      "experts": E, "requests_per_family": per_family}
+
+    # -- A: grouped vs FIFO waves on a skewed routing trace ------------------
+    tok_a, tok_b = _family_tokens(params, cfg, ctx)
+    base = ServeConfig(max_slots=SLOTS, cache_len=CACHE_LEN,
+                       prefill_chunk=PREFILL_CHUNK, wave_size=WAVE)
+    results = {}
+    for mode, grouped in (("fifo", False), ("grouped", True)):
+        sched = ContinuousBatchingScheduler(
+            params, cfg, ctx,
+            dataclasses.replace(base, expert_batching=grouped))
+        sched.run(_skewed_trace(tok_a, tok_b, 1))      # warm compiles
+        sched.reset()
+        results[mode] = sched.run(_skewed_trace(tok_a, tok_b, per_family))
+    fifo_d = results["fifo"]["mean_distinct_experts"]
+    grp_d = results["grouped"]["mean_distinct_experts"]
+    wave_row = {
+        "family_tokens": [tok_a, tok_b],
+        "fifo_mean_distinct_experts": round(fifo_d, 3),
+        "grouped_mean_distinct_experts": round(grp_d, 3),
+        "reduction_pct": round(100 * (1 - grp_d / fifo_d), 1) if fifo_d else 0,
+        "grouped_no_worse": grp_d <= fifo_d,
+        "fifo_waves": results["fifo"]["expert_waves"],
+        "grouped_waves": results["grouped"]["expert_waves"],
+        "forced_includes": results["grouped"]["forced_includes"],
+    }
+    out["wave_grouping"] = wave_row
+    lines.append(
+        f"residency_wave,arch={ARCH},fifo_distinct="
+        f"{wave_row['fifo_mean_distinct_experts']},grouped_distinct="
+        f"{wave_row['grouped_mean_distinct_experts']},reduction_pct="
+        f"{wave_row['reduction_pct']},no_worse={wave_row['grouped_no_worse']}")
+
+    # -- B: admitted concurrency at equal budget, residency on vs off --------
+    hw = _budget(cfg)
+    n_req = SLOTS
+    full_cfg = ServeConfig(max_slots=SLOTS, cache_len=CACHE_LEN,
+                           prefill_chunk=PREFILL_CHUNK, hw=hw)
+    res_cfg = dataclasses.replace(full_cfg, resident_experts=RESIDENT,
+                                  prefetch_experts=1)
+    runs = {}
+    outs = {}
+    for mode, scfg in (("full", full_cfg), ("resident", res_cfg)):
+        sched = ContinuousBatchingScheduler(params, cfg, ctx, scfg)
+        sched.run(_uniform_trace(np.random.default_rng(1), 2,
+                                 cfg.vocab_size))
+        sched.reset()
+        runs[mode] = sched.run(_uniform_trace(np.random.default_rng(0),
+                                              n_req, cfg.vocab_size))
+        outs[mode] = {r.rid: list(r.out) for r in sched.finished}
+        runs[mode]["_lost"] = n_req - len(sched.finished)
+    ratio = (runs["resident"]["max_occupancy"]
+             / max(runs["full"]["max_occupancy"], 1))
+    res_m = runs["resident"]
+    res_row = {
+        "budget_gb": round(res_m["budget_bytes"] / 1e9, 4),
+        "full_occupancy": runs["full"]["max_occupancy"],
+        "resident_occupancy": res_m["max_occupancy"],
+        "admitted_ratio": round(ratio, 2),
+        "target_1_3x_met": ratio >= 1.3,
+        "full_peak_gb": round(runs["full"]["modeled_peak_bytes"] / 1e9, 4),
+        "resident_peak_gb": round(res_m["modeled_peak_bytes"] / 1e9, 4),
+        "within_budget": (res_m["modeled_peak_bytes"]
+                          <= res_m["budget_bytes"]),
+        "bitwise_identical": outs["full"] == outs["resident"],
+        "accepted_lost": res_m["_lost"],
+        "prefetch_hits": res_m["prefetch_hits"],
+        "prefetch_misses": res_m["prefetch_misses"],
+        "demand_reruns": res_m["demand_reruns"],
+        "residency": res_m["residency"],
+    }
+    out["residency"] = res_row
+    lines.append(
+        f"residency,arch={ARCH},resident={RESIDENT}/{E},full_occ="
+        f"{res_row['full_occupancy']},resident_occ="
+        f"{res_row['resident_occupancy']},admitted_ratio="
+        f"{res_row['admitted_ratio']},target_1_3x_met="
+        f"{res_row['target_1_3x_met']},bitwise={res_row['bitwise_identical']},"
+        f"lost={res_row['accepted_lost']}")
+
+    if not tiny:
+        with open("BENCH_residency.json", "w") as f:
+            json.dump(out, f, indent=2)
+        lines.append("residency,written=BENCH_residency.json")
+    return lines
+
+
+if __name__ == "__main__":
+    print("\n".join(run()))

@@ -14,8 +14,9 @@ from benchmarks import (ablation_capacity, adaptive_microbench,
                         chaos_harness, compiled_memory, dispatch_microbench,
                         fig2_distribution, fig4_throughput, fig5_mact,
                         fused_microbench, paging_microbench,
-                        pipeline_microbench, placement_microbench, roofline,
-                        serving_microbench, table4_memory)
+                        pipeline_microbench, placement_microbench,
+                        residency_microbench, roofline, serving_microbench,
+                        table4_memory)
 
 SUITES = {
     "dispatch": dispatch_microbench.run,  # single-sort planner vs old path
@@ -25,6 +26,7 @@ SUITES = {
     "adaptive": adaptive_microbench.run,  # per-layer MACT vs static global
     "serving": serving_microbench.run,    # continuous vs static batching
     "paging": paging_microbench.run,      # paged vs monolithic KV cache
+    "residency": residency_microbench.run,  # expert waves + weight residency
     "chaos": chaos_harness.run,           # injected faults: ladder/resume/shed
     "table4": table4_memory.run,       # Table 4 (memory model, Methods 1/2/3)
     "fig2": fig2_distribution.run,     # Fig. 2 (token distribution)

@@ -184,6 +184,42 @@ def paging_table() -> list[str]:
     return out
 
 
+def residency_table() -> list[str]:
+    d = _load("BENCH_residency.json")
+    if not d:
+        return ["(BENCH_residency.json missing — run "
+                "`benchmarks.run residency`)"]
+    w, r = d["wave_grouping"], d["residency"]
+    out = ["| wave policy | mean distinct experts / wave | waves |",
+           "|---|---|---|",
+           f"| FIFO age order | {w['fifo_mean_distinct_experts']:.2f} "
+           f"| {w['fifo_waves']} |",
+           f"| **expert-grouped** | **{w['grouped_mean_distinct_experts']:.2f}** "
+           f"| {w['grouped_waves']} |",
+           "",
+           f"{w['reduction_pct']:.1f}% fewer distinct activated experts per "
+           f"wave (wave size {d['wave']}, {d['experts']} experts, skewed "
+           f"2-family trace on {d['arch']}), outputs bitwise-identical to "
+           f"FIFO; {w['forced_includes']} starvation force-includes.",
+           "",
+           "| weight tier | admitted concurrency | modeled peak (GB) |",
+           "|---|---|---|",
+           f"| all experts resident | {r['full_occupancy']} "
+           f"| {r['full_peak_gb']:.3f} |",
+           f"| **resident tier** | **{r['resident_occupancy']}** "
+           f"| {r['resident_peak_gb']:.3f} |",
+           "",
+           f"{r['admitted_ratio']:.2f}x admitted concurrency at an equal "
+           f"budget of {r['budget_gb']:.3f} GB "
+           f"(target >= 1.3x: {'met' if r['target_1_3x_met'] else 'NOT met'}; "
+           f"within budget: {r['within_budget']}).  Outputs bitwise equal to "
+           f"the never-offloaded scheduler: {r['bitwise_identical']}, "
+           f"{r['accepted_lost']} accepted requests lost; prefetch "
+           f"{r['prefetch_hits']} hits / {r['prefetch_misses']} misses, "
+           f"{r['demand_reruns']} demand re-runs."]
+    return out
+
+
 def chaos_table() -> list[str]:
     d = _load("BENCH_chaos.json")
     if not d:
@@ -311,6 +347,8 @@ def main() -> None:
     _section("Continuous-batching serving (mixed-length trace, CPU)",
              serving_table)
     _section("Paged KV cache (vs monolithic slot map, CPU)", paging_table)
+    _section("Expert waves + weight residency (MoE decode, CPU)",
+             residency_table)
     _section("Fault tolerance (chaos harness, injected faults)", chaos_table)
 
 

@@ -311,11 +311,36 @@ def optimal_chunks(s_pp: float, s_max: float, pipeline_depth: int = 1) -> int:
 # e_n * tokens rows — the paper's "s' approaches e*s" realised by
 # construction rather than by adversarial routing.
 
+def expert_weight_bytes(cfg: ModelConfig,
+                        dtype_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+    """Weight bytes of ONE routed expert in ONE MoE layer (w1 + w3 + w2 =
+    3 * h * g_e params) — the unit the residency tier streams
+    (docs/DESIGN.md §Residency) and the prefetch buffer is sized in."""
+    if cfg.moe is None:
+        return 0.0
+    return 3 * cfg.d_model * cfg.moe.d_ff_expert * dtype_bytes
+
+
 def serve_weight_bytes(cfg: ModelConfig,
-                       dtype_bytes: float = WEIGHT_ONLY_BYTES) -> float:
+                       dtype_bytes: float = WEIGHT_ONLY_BYTES, *,
+                       resident_experts: Optional[int] = None) -> float:
     """Serving static memory: Eq. (1) with weight-only bytes per param and
-    all stages (incl. the LM head) resident."""
-    return total_params(cfg) * dtype_bytes
+    all stages (incl. the LM head) resident.
+
+    ``resident_experts`` splits the total into dense-stage weights plus
+    per-RESIDENT-expert weights (docs/DESIGN.md §Residency): with ``r`` of
+    ``E`` experts resident per MoE layer, the ``E - r`` cold experts live
+    host-side and their ``3 h g_e`` params come off the device total — the
+    serving analogue of Eq. 2 dropping the 2h dispatch term under ``fused``.
+    ``None`` (the default) keeps the historical all-resident model exactly.
+    """
+    total = total_params(cfg) * dtype_bytes
+    if resident_experts is None or cfg.moe is None:
+        return total
+    E = cfg.moe.num_experts
+    r = min(max(int(resident_experts), 0), E)
+    n_moe = sum(1 for spec in cfg.layer_specs() if spec.ffn == "moe")
+    return total - (E - r) * expert_weight_bytes(cfg, dtype_bytes) * n_moe
 
 
 def decode_cache_bytes(cfg: ModelConfig, cache_len: int,
@@ -364,7 +389,9 @@ def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
                        decode_tokens: int, prefill_tokens: int = 0,
                        dtype_bytes: int = 2,
                        weight_bytes: float = WEIGHT_ONLY_BYTES,
-                       replica_weight_bytes: float = 0.0) -> float:
+                       replica_weight_bytes: float = 0.0,
+                       resident_experts: Optional[int] = None,
+                       prefetch_experts: int = 0) -> float:
     """Modeled peak serving memory with ``requests`` admitted requests:
     weights + per-request caches + the worse of the decode wave and the
     interleaved prefill chunk (they never run concurrently — the scheduler
@@ -379,12 +406,21 @@ def serving_peak_bytes(cfg: ModelConfig, *, requests: int, cache_len: int,
 
     ``replica_weight_bytes`` is the static cost of the engine-build expert
     placement's replica slots (docs/DESIGN.md §Placement) — the serving
-    analogue of the training-side budget cut in ``s_prime_max``."""
+    analogue of the training-side budget cut in ``s_prime_max``.
+
+    ``resident_experts``/``prefetch_experts`` price the expert-weight
+    residency tier (docs/DESIGN.md §Residency): only ``resident_experts``
+    experts' weights per MoE layer are device-resident, plus an in-flight
+    double-buffer of ``prefetch_experts`` experts being streamed ahead of
+    the wave that needs them.  Defaults keep the all-resident model."""
     dims = LayerDims.from_config(cfg)
     act = max(serve_act_bytes(dims, min(decode_tokens, requests), cfg,
                               dtype_bytes),
               serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
-    return (serve_weight_bytes(cfg, weight_bytes) + replica_weight_bytes
+    return (serve_weight_bytes(cfg, weight_bytes,
+                               resident_experts=resident_experts)
+            + prefetch_experts * expert_weight_bytes(cfg, weight_bytes)
+            + replica_weight_bytes
             + requests * decode_cache_bytes(cfg, cache_len, dtype_bytes)
             + act)
 
@@ -398,19 +434,25 @@ def serving_paged_peak_bytes(cfg: ModelConfig, *, page_bytes: float,
                              decode_tokens: int, prefill_tokens: int = 0,
                              dtype_bytes: int = 2,
                              weight_bytes: float = WEIGHT_ONLY_BYTES,
-                             replica_weight_bytes: float = 0.0) -> float:
+                             replica_weight_bytes: float = 0.0,
+                             resident_experts: Optional[int] = None,
+                             prefetch_experts: int = 0) -> float:
     """Paged-serving form of Eq. (3) (docs/DESIGN.md §Paging): the cache
     term counts ``page_bytes`` — bytes of pages *actually allocated* (or
     reserved: the scheduler passes allocated + outstanding worst-case
     reservations at admission, and the allocator's high-watermark when
     reporting the realised peak) — instead of requests * M_cache(L_max).
     Everything else is the slot-map model unchanged, so paged and
-    monolithic admission differ exactly by their cache terms."""
+    monolithic admission differ exactly by their cache terms.  The
+    ``resident_experts``/``prefetch_experts`` weight split composes the
+    same way it does in ``serving_peak_bytes``."""
     dims = LayerDims.from_config(cfg)
     act = max(serve_act_bytes(dims, decode_tokens, cfg, dtype_bytes),
               serve_act_bytes(dims, prefill_tokens, cfg, dtype_bytes))
-    return (serve_weight_bytes(cfg, weight_bytes) + replica_weight_bytes
-            + page_bytes + act)
+    return (serve_weight_bytes(cfg, weight_bytes,
+                               resident_experts=resident_experts)
+            + prefetch_experts * expert_weight_bytes(cfg, weight_bytes)
+            + replica_weight_bytes + page_bytes + act)
 
 
 def serving_paged_fits(cfg: ModelConfig, hw: HardwareProfile, **kw) -> bool:

@@ -85,6 +85,23 @@ def main() -> None:
     ap.add_argument("--placement-replicas", type=int, default=0,
                     help="extra hot-expert weight slots per peer; their "
                          "weight bytes are priced by admission control")
+    ap.add_argument("--expert-batching", action="store_true",
+                    help="group decode waves by predicted expert overlap "
+                         "instead of FIFO age order (MoE archs only; "
+                         "docs/DESIGN.md §Residency)")
+    ap.add_argument("--wave-size", type=int, default=0,
+                    help="max members per decode wave (0 = every resident); "
+                         ">0 engages the masked subset step")
+    ap.add_argument("--max-wave-wait", type=int, default=4,
+                    help="starvation guard: a resident that skipped this "
+                         "many waves is force-included in the next one")
+    ap.add_argument("--resident-experts", type=int, default=0,
+                    help="per-MoE-layer resident expert capacity; cold "
+                         "experts are host-offloaded and prefetched ahead "
+                         "of the wave (0 = all resident)")
+    ap.add_argument("--probe-router", action="store_true",
+                    help="router-only probe on prompt tokens seeds the "
+                         "prefetch prediction before telemetry exists")
     ap.add_argument("--inject", default=None,
                     help="chaos faults on scheduler steps, e.g. 'oom@20' "
                          "(faulted decode waves requeue accepted requests)")
@@ -143,7 +160,12 @@ def main() -> None:
                        page_size=args.page_size,
                        prefix_cache=args.prefix_cache,
                        preemption=args.preemption,
-                       replica_weight_bytes=replica_bytes)
+                       replica_weight_bytes=replica_bytes,
+                       expert_batching=args.expert_batching,
+                       wave_size=args.wave_size,
+                       max_wave_wait=args.max_wave_wait,
+                       resident_experts=args.resident_experts,
+                       probe_router=args.probe_router)
 
     injector = None
     if args.inject:
@@ -182,6 +204,18 @@ def main() -> None:
           f"max occupancy {m['max_occupancy']}/{args.max_slots} slots")
     print(f"schedule: {m['decode_waves']} decode waves, "
           f"{m['prefill_chunks']} interleaved prefill chunks")
+    if m["expert_waves"]:
+        print(f"expert waves: {m['expert_waves']} waves, mean "
+              f"{m['mean_distinct_experts']:.2f} distinct experts / "
+              f"{m['mean_wave_occupancy']:.2f} members per wave, "
+              f"{m['forced_includes']} starvation force-includes")
+    if "residency" in m:
+        r = m["residency"]
+        print(f"residency: {args.resident_experts} resident experts/layer "
+              f"(hwm {r['resident_experts_hwm']}), prefetch "
+              f"{m['prefetch_hits']} hits / {m['prefetch_misses']} misses, "
+              f"{r['restores']} restores ({r['demand_restores']} on demand, "
+              f"{m['demand_reruns']} re-runs), {r['offloads']} offloads")
     if args.page_size:
         extra = ""
         if args.prefix_cache:

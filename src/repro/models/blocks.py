@@ -403,8 +403,14 @@ def _cross_qkv(p: dict, x: jax.Array, enc_out: jax.Array, cfg: ModelConfig):
 
 
 def apply_layer_decode(params: dict, x: jax.Array, cache, spec: LayerSpec,
-                       cfg: ModelConfig, ctx: DistContext, pos: jax.Array):
-    """Single-token decode.  cache: layer cache pytree.  Returns (x, cache)."""
+                       cfg: ModelConfig, ctx: DistContext, pos: jax.Array, *,
+                       return_load: bool = False):
+    """Single-token decode.  cache: layer cache pytree.  Returns (x, cache).
+
+    ``return_load=True`` additionally returns this layer's (E,) routed-load
+    histogram (zeros for dense/none FFNs) — the per-step telemetry the
+    expert-aware serving path consumes (docs/DESIGN.md §Residency).  The
+    default path is unchanged."""
     h = apply_norm(params["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
         h, new_attn = attn_mixer_decode(params["mixer"], h, cache["attn"], pos,
@@ -425,21 +431,30 @@ def apply_layer_decode(params: dict, x: jax.Array, cache, spec: LayerSpec,
         o = decode_attention(q, cache["cross_k"], cache["cross_v"],
                              Se * jnp.ones((B,), jnp.int32), spec.attn)
         x = x + o.reshape(B, 1, -1) @ params["cross"]["wo"]
+    load = None
     if spec.ffn != "none":
         h = apply_norm(params["norm2"], x, cfg.norm)
         if spec.ffn == "dense":
             h = apply_mlp(params["ffn"], h)
         else:
-            h, _ = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+            h, st = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+            load = st["load"].astype(jnp.float32)
         x = x + h
+    if return_load:
+        E = cfg.moe.num_experts if cfg.moe is not None else 1
+        if load is None:
+            load = jnp.zeros((E,), jnp.float32)
+        return x, cache, load
     return x, cache
 
 
 def apply_layer_extend(params: dict, x: jax.Array, cache, spec: LayerSpec,
-                       cfg: ModelConfig, ctx: DistContext, pos0):
+                       cfg: ModelConfig, ctx: DistContext, pos0, *,
+                       return_load: bool = False):
     """C-token cache extension (serving chunked prefill, docs/DESIGN.md
     §Serving).  x: (B, C, d) at positions pos0..pos0+C-1.  Returns
-    (x, cache) — the multi-token generalisation of ``apply_layer_decode``."""
+    (x, cache) — the multi-token generalisation of ``apply_layer_decode``,
+    with the same optional (E,) load output under ``return_load``."""
     B, C, _ = x.shape
     h = apply_norm(params["norm1"], x, cfg.norm)
     if spec.mixer == "attn":
@@ -462,13 +477,20 @@ def apply_layer_extend(params: dict, x: jax.Array, cache, spec: LayerSpec,
         mask = jnp.ones((C, Se), bool)          # cross attention: non-causal
         o = extend_attention(q, cache["cross_k"], cache["cross_v"], mask)
         x = x + o.reshape(B, C, -1) @ params["cross"]["wo"]
+    load = None
     if spec.ffn != "none":
         h = apply_norm(params["norm2"], x, cfg.norm)
         if spec.ffn == "dense":
             h = apply_mlp(params["ffn"], h)
         else:
-            h, _ = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+            h, st = moe_ffn(params["ffn"], h, cfg.moe, ctx)
+            load = st["load"].astype(jnp.float32)
         x = x + h
+    if return_load:
+        E = cfg.moe.num_experts if cfg.moe is not None else 1
+        if load is None:
+            load = jnp.zeros((E,), jnp.float32)
+        return x, cache, load
     return x, cache
 
 

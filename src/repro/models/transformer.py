@@ -327,8 +327,15 @@ def init_cache(params: dict, cfg: ModelConfig, batch_size: int, seq_len: int,
 
 
 def decode_step(params: dict, cfg: ModelConfig, ctx: DistContext,
-                cache: dict, tokens: jax.Array):
-    """tokens: (B, 1) -> (logits (B, 1, V), new cache).  Position from cache."""
+                cache: dict, tokens: jax.Array, *, return_load: bool = False):
+    """tokens: (B, 1) -> (logits (B, 1, V), new cache).  Position from cache.
+
+    ``return_load=True`` appends the (L_moe, E) per-MoE-layer routed-load
+    matrix to the return — same layer order as ``forward``'s
+    ``load_per_layer`` (pre, scanned periods period-major, remainder) — the
+    per-step telemetry source of the expert-aware serving path
+    (docs/DESIGN.md §Residency).  The default path is byte-identical to
+    before the flag existed."""
     pos = cache["pos"]
     x = jnp.take(params["embed"], tokens, axis=0)
     if cfg.learned_pos:
@@ -336,28 +343,50 @@ def decode_step(params: dict, cfg: ModelConfig, ctx: DistContext,
             params["pos_embed"], jnp.minimum(pos, cfg.learned_pos - 1), 1, 0)[None]
     x = x.astype(params["embed"].dtype)
     pattern = cfg.pattern
+    E = cfg.moe.num_experts if cfg.moe is not None else 1
+    layer_loads: list = []
     new_cache: dict = {"pos": pos + 1}
 
     new_pre = []
     for i, layer_params in enumerate(params.get("pre", [])):
-        x, c = blocks.apply_layer_decode(layer_params, x, cache["pre"][i],
-                                         cfg.prefix[i], cfg, ctx, pos)
+        out = blocks.apply_layer_decode(layer_params, x, cache["pre"][i],
+                                        cfg.prefix[i], cfg, ctx, pos,
+                                        return_load=return_load)
+        x, c = out[0], out[1]
         new_pre.append(c)
+        if return_load and cfg.prefix[i].ffn == "moe":
+            layer_loads.append(out[2][None])
     new_cache["pre"] = new_pre
 
     if params["periods"] is not None:
         def body(x, inp):
             period_params, period_cache = inp
             new_pc = []
+            loads_p = []
             for i, spec in enumerate(pattern):
-                x, c = blocks.apply_layer_decode(period_params[i], x,
-                                                 period_cache[i], spec, cfg,
-                                                 ctx, pos)
-                new_pc.append(c)
-            return x, new_pc
+                out = blocks.apply_layer_decode(period_params[i], x,
+                                                period_cache[i], spec, cfg,
+                                                ctx, pos,
+                                                return_load=return_load)
+                x = out[0]
+                new_pc.append(out[1])
+                if return_load and spec.ffn == "moe":
+                    loads_p.append(out[2])
+            if not return_load:
+                return x, new_pc
+            loads_p = (jnp.stack(loads_p) if loads_p
+                       else jnp.zeros((0, E), jnp.float32))
+            return x, (new_pc, loads_p)
 
-        x, new_periods = jax.lax.scan(body, x, (params["periods"],
-                                                cache["periods"]))
+        x, ys = jax.lax.scan(body, x, (params["periods"], cache["periods"]))
+        if return_load:
+            new_periods, loads_stack = ys
+            n_moe_pat = sum(1 for s in pattern if s.ffn == "moe")
+            if n_moe_pat:
+                layer_loads.append(
+                    loads_stack.reshape(cfg.num_periods * n_moe_pat, E))
+        else:
+            new_periods = ys
         new_cache["periods"] = new_periods
     else:
         new_cache["periods"] = None
@@ -365,22 +394,33 @@ def decode_step(params: dict, cfg: ModelConfig, ctx: DistContext,
     new_rem = []
     for i, layer_params in enumerate(params["rem"]):
         spec = pattern[i % len(pattern)]
-        x, c = blocks.apply_layer_decode(layer_params, x, cache["rem"][i],
-                                         spec, cfg, ctx, pos)
+        out = blocks.apply_layer_decode(layer_params, x, cache["rem"][i],
+                                        spec, cfg, ctx, pos,
+                                        return_load=return_load)
+        x, c = out[0], out[1]
         new_rem.append(c)
+        if return_load and spec.ffn == "moe":
+            layer_loads.append(out[2][None])
     new_cache["rem"] = new_rem
 
     logits = unembed(params, cfg, x)
+    if return_load:
+        load_per_layer = (jnp.concatenate(layer_loads, axis=0) if layer_loads
+                          else jnp.zeros((0, E), jnp.float32))
+        return logits, new_cache, load_per_layer
     return logits, new_cache
 
 
 def extend_step(params: dict, cfg: ModelConfig, ctx: DistContext,
-                cache: dict, tokens: jax.Array):
+                cache: dict, tokens: jax.Array, *, return_load: bool = False):
     """tokens: (B, C) -> (logits (B, C, V), new cache).  Multi-token cache
     extension — the serving chunked-prefill continuation (docs/DESIGN.md
     §Serving): each chunk attends over the cache so far plus itself, then
     its K/V joins the cache.  ``decode_step`` is the C == 1 special case
-    (kept separate: decode stays on the length-mask fast path)."""
+    (kept separate: decode stays on the length-mask fast path).
+
+    ``return_load=True`` appends the (L_moe, E) routed-load matrix, exactly
+    as in ``decode_step``."""
     pos0 = cache["pos"]
     B, C = tokens.shape
     x = jnp.take(params["embed"], tokens, axis=0)
@@ -389,28 +429,50 @@ def extend_step(params: dict, cfg: ModelConfig, ctx: DistContext,
         x = x + jnp.take(params["pos_embed"], idx, axis=0)[None]
     x = x.astype(params["embed"].dtype)
     pattern = cfg.pattern
+    E = cfg.moe.num_experts if cfg.moe is not None else 1
+    layer_loads: list = []
     new_cache: dict = {"pos": pos0 + C}
 
     new_pre = []
     for i, layer_params in enumerate(params.get("pre", [])):
-        x, c = blocks.apply_layer_extend(layer_params, x, cache["pre"][i],
-                                         cfg.prefix[i], cfg, ctx, pos0)
+        out = blocks.apply_layer_extend(layer_params, x, cache["pre"][i],
+                                        cfg.prefix[i], cfg, ctx, pos0,
+                                        return_load=return_load)
+        x, c = out[0], out[1]
         new_pre.append(c)
+        if return_load and cfg.prefix[i].ffn == "moe":
+            layer_loads.append(out[2][None])
     new_cache["pre"] = new_pre
 
     if params["periods"] is not None:
         def body(x, inp):
             period_params, period_cache = inp
             new_pc = []
+            loads_p = []
             for i, spec in enumerate(pattern):
-                x, c = blocks.apply_layer_extend(period_params[i], x,
-                                                 period_cache[i], spec, cfg,
-                                                 ctx, pos0)
-                new_pc.append(c)
-            return x, new_pc
+                out = blocks.apply_layer_extend(period_params[i], x,
+                                                period_cache[i], spec, cfg,
+                                                ctx, pos0,
+                                                return_load=return_load)
+                x = out[0]
+                new_pc.append(out[1])
+                if return_load and spec.ffn == "moe":
+                    loads_p.append(out[2])
+            if not return_load:
+                return x, new_pc
+            loads_p = (jnp.stack(loads_p) if loads_p
+                       else jnp.zeros((0, E), jnp.float32))
+            return x, (new_pc, loads_p)
 
-        x, new_periods = jax.lax.scan(body, x, (params["periods"],
-                                                cache["periods"]))
+        x, ys = jax.lax.scan(body, x, (params["periods"], cache["periods"]))
+        if return_load:
+            new_periods, loads_stack = ys
+            n_moe_pat = sum(1 for s in pattern if s.ffn == "moe")
+            if n_moe_pat:
+                layer_loads.append(
+                    loads_stack.reshape(cfg.num_periods * n_moe_pat, E))
+        else:
+            new_periods = ys
         new_cache["periods"] = new_periods
     else:
         new_cache["periods"] = None
@@ -418,10 +480,18 @@ def extend_step(params: dict, cfg: ModelConfig, ctx: DistContext,
     new_rem = []
     for i, layer_params in enumerate(params["rem"]):
         spec = pattern[i % len(pattern)]
-        x, c = blocks.apply_layer_extend(layer_params, x, cache["rem"][i],
-                                         spec, cfg, ctx, pos0)
+        out = blocks.apply_layer_extend(layer_params, x, cache["rem"][i],
+                                        spec, cfg, ctx, pos0,
+                                        return_load=return_load)
+        x, c = out[0], out[1]
         new_rem.append(c)
+        if return_load and spec.ffn == "moe":
+            layer_loads.append(out[2][None])
     new_cache["rem"] = new_rem
 
     logits = unembed(params, cfg, x)
+    if return_load:
+        load_per_layer = (jnp.concatenate(layer_loads, axis=0) if layer_loads
+                          else jnp.zeros((0, E), jnp.float32))
+        return logits, new_cache, load_per_layer
     return logits, new_cache

@@ -153,6 +153,110 @@ def get_prefill_fn(cfg: ModelConfig, ctx: DistContext, cache_len: int,
 
 
 # ---------------------------------------------------------------------------
+# expert-aware steps (docs/DESIGN.md §Residency)
+#
+# The loads/masked variants are deliberately NOT cache-donating: the
+# residency demand loop may discard a wave that activated an offloaded
+# expert and re-run it from the SAME pre-wave cache after restoring the
+# missing weights, so the input cache must survive the call.
+# ---------------------------------------------------------------------------
+
+def get_decode_step_masked(cfg: ModelConfig, ctx: DistContext):
+    """Compiled subset-wave decode over the slot-stacked cache:
+    step(params, cache, tokens (S,1), mask (S,) bool)
+    -> (logits (S,1,V), cache', load (S, L_moe, E)).
+
+    Every slot runs the vmapped per-slot step (slot math is independent, so
+    member outputs are bitwise those of the full-batch step regardless of
+    which other slots share the wave); the mask then tree-selects which
+    slots' cache entries advance — non-members keep their old cache bits
+    exactly, which is what makes grouped waves equivalent to FIFO waves.
+    Non-member load rows are zeroed so layer unions only see members."""
+    def build():
+        def fn(params, cache, tokens, mask):
+            logits, new_cache, load = jax.vmap(
+                lambda c, t: transformer.decode_step(
+                    params, cfg, ctx, c, t, return_load=True),
+                in_axes=(0, 0))(cache, tokens)
+
+            def keep(n, o):
+                m = mask.reshape(mask.shape + (1,) * (n.ndim - 1))
+                return jnp.where(m, n, o)
+            out_cache = jax.tree_util.tree_map(keep, new_cache, cache)
+            load = load * mask.astype(load.dtype)[:, None, None]
+            return logits, out_cache, load
+        return _jit(fn)
+    return _cached(("decode_masked", cfg, ctx), build)
+
+
+def get_extend_step_loads(cfg: ModelConfig, ctx: DistContext):
+    """Compiled chunk step that also reports the (L_moe, E) routed load —
+    step(params, cache, tokens (B,C)) -> (logits (B,C,V), cache, load)."""
+    def build():
+        def fn(params, cache, tokens):
+            return transformer.extend_step(params, cfg, ctx, cache, tokens,
+                                           return_load=True)
+        return _jit(fn)
+    return _cached(("extend_loads", cfg, ctx), build)
+
+
+def get_prefill_fn_loads(cfg: ModelConfig, ctx: DistContext, cache_len: int,
+                         dtype=jnp.float32):
+    """Single-pass prefill that also reports the (L_moe, E) routed load."""
+    dtype = jnp.dtype(dtype)
+
+    def build():
+        def fn(params, batch):
+            logits, stats, cache = transformer.forward(
+                params, cfg, ctx, batch, return_cache=True,
+                cache_len=cache_len, cache_dtype=dtype)
+            if cfg.moe is not None:
+                load = stats["load_per_layer"]
+            else:
+                load = jnp.zeros((0, 1), jnp.float32)
+            return logits[:, -1:], cache, load
+        return _jit(fn)
+    return _cached(("prefill_loads", cfg, ctx, cache_len, dtype.name), build)
+
+
+def get_router_probe(cfg: ModelConfig, ctx: DistContext):
+    """Compiled router-only probe: probe(params, tokens (N,)) -> (N, L_moe, E)
+    activation counts.
+
+    Runs every MoE layer's router directly on the token EMBEDDINGS — no
+    attention, no FFN — as a cheap approximation of where those tokens
+    would route (the §Residency prefetch hint for requests with no
+    telemetry yet).  Approximate by construction: real routing sees the
+    residual stream, the probe sees layer-0 input; it is a prediction
+    seed, never a correctness input (demand restore covers its misses).
+    """
+    from repro.core.router import route
+    from repro.serving.residency import moe_layer_refs
+
+    refs = moe_layer_refs(cfg)
+
+    def build():
+        def fn(params, tokens):
+            x = jnp.take(params["embed"], tokens, axis=0)
+            x = x.astype(params["embed"].dtype)
+            E = cfg.moe.num_experts
+            per_layer = []
+            for head, i, p in refs:
+                router = params[head][i]["ffn"]["router"]
+                if p is not None:
+                    router = jax.tree_util.tree_map(lambda a: a[p], router)
+                r = route(router, x, cfg.moe)
+                per_layer.append(
+                    jax.nn.one_hot(r.expert_idx, E, dtype=jnp.float32)
+                    .sum(axis=1))                              # (N, E)
+            if not per_layer:
+                return jnp.zeros((tokens.shape[0], 0, 1), jnp.float32)
+            return jnp.stack(per_layer, axis=1)                # (N, L, E)
+        return _jit(fn)
+    return _cached(("router_probe", cfg, ctx), build)
+
+
+# ---------------------------------------------------------------------------
 # prefill
 # ---------------------------------------------------------------------------
 
@@ -190,11 +294,21 @@ def prefill_replay(params: dict, cfg: ModelConfig, ctx: DistContext,
 
 
 def prefill_chunk(params: dict, cfg: ModelConfig, ctx: DistContext,
-                  cache, seg: jax.Array, cache_len: int, dtype=jnp.float32):
+                  cache, seg: jax.Array, cache_len: int, dtype=jnp.float32,
+                  *, return_load: bool = False):
     """One chunked-prefill span: the first (``cache is None``) runs the
     single-pass prefill, later spans the compiled extend step.  The single
     dispatch point shared by ``prefill_chunked`` and the scheduler's
-    interleave.  Returns (next_token_logits (B, 1, V), cache)."""
+    interleave.  Returns (next_token_logits (B, 1, V), cache), plus the
+    span's (L_moe, E) routed load when ``return_load`` (the expert-aware
+    scheduler's telemetry feed; these variants do not donate the cache, so
+    the span can re-run after a residency demand restore)."""
+    if return_load:
+        if cache is None:
+            return get_prefill_fn_loads(cfg, ctx, cache_len, dtype)(
+                params, {"tokens": seg})
+        full, cache, load = get_extend_step_loads(cfg, ctx)(params, cache, seg)
+        return full[:, -1:], cache, load
     if cache is None:
         return prefill(params, cfg, ctx, {"tokens": seg}, cache_len, dtype)
     full, cache = get_extend_step(cfg, ctx)(params, cache, seg)

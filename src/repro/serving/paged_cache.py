@@ -191,6 +191,7 @@ class PagedCachePool:
                 rows = RESERVED_PAGES + n_state
                 pools.append(jnp.zeros((rows, *info.bshape), dtype))
         self.pools = tuple(pools)
+        self._decode_loads = None        # built lazily (expert-aware only)
         self._decode = self._build_decode()
         self._install = self._build_install()
         self._gather = self._build_gather()
@@ -270,6 +271,53 @@ class PagedCachePool:
             return logits, tuple(new_pools)
 
         return engine._jit(fn, donate_cache_arg=1)
+
+    def _build_decode_loads(self):
+        """Loads-reporting twin of ``_build_decode`` for the expert-aware
+        scheduler (docs/DESIGN.md §Residency): same gather -> decode ->
+        scatter, but the decode also reports per-slot routed loads, pools
+        are NOT donated, and the new pools are returned instead of being
+        committed — the residency demand loop may discard a run that
+        touched an offloaded expert and re-run it against the same input
+        pools after restoring the weights."""
+        cfg, ctx = self.cfg, self.ctx
+        infos, treedef = self.layout.leaves, self.layout.treedef
+        gidx, page = self._gidx, self.page
+
+        def fn(params, pools, gt, st, sg, ss, pos, toks):
+            leaves = []
+            for i, info in enumerate(infos):
+                if info.kind == "pos":
+                    leaves.append(pos)
+                elif info.kind == "token":
+                    x = blocks.gather_paged_tokens(
+                        pools[i], gt[gidx[info.group]], info.token_axis,
+                        info.group.length)
+                    leaves.append(jnp.expand_dims(x, 1 + info.batch_axis))
+                else:
+                    leaves.append(jnp.expand_dims(pools[i][sg],
+                                                  1 + info.batch_axis))
+            cache = jax.tree_util.tree_unflatten(treedef, leaves)
+            logits, new_cache, load = jax.vmap(
+                lambda c, t: transformer.decode_step(params, cfg, ctx, c, t,
+                                                     return_load=True),
+                in_axes=(0, 0))(cache, toks)
+            new_leaves = jax.tree_util.tree_flatten(new_cache)[0]
+            new_pools = []
+            for i, info in enumerate(infos):
+                if info.kind == "pos":
+                    new_pools.append(None)
+                    continue
+                x = jnp.squeeze(new_leaves[i], 1 + info.batch_axis)
+                if info.kind == "token":
+                    new_pools.append(blocks.scatter_paged_tokens(
+                        pools[i], st[gidx[info.group]], x, info.token_axis,
+                        page))
+                else:
+                    new_pools.append(pools[i].at[ss].set(x))
+            return logits, load, tuple(new_pools)
+
+        return engine._jit(fn)
 
     def _build_install(self):
         infos, gidx, page = self.layout.leaves, self._gidx, self.page
@@ -369,6 +417,25 @@ class PagedCachePool:
             params, self.pools, gt, st, sg, ss,
             jnp.asarray(pos.astype(np.int32)), jnp.asarray(toks))
         return logits
+
+    def decode_wave_loads(self, params, slot_rps: list, pos: np.ndarray,
+                          toks: np.ndarray):
+        """Non-committing, loads-reporting wave for the expert-aware
+        scheduler.  Membership is ``slot_rps[s] is not None``: a None slot
+        reads the zero page and scatters to the scratch page, so committing
+        the returned pools never perturbs a non-member's state — the paged
+        form of the monolithic masked step's tree-select.  Returns
+        (logits, load (slots, L_moe, E), new_pools); the caller assigns
+        ``pool.pools = new_pools`` only after a residency-clean run."""
+        if self._decode_loads is None:
+            self._decode_loads = self._build_decode_loads()
+        gt = self._tables(slot_rps, for_scatter=False)
+        st = self._tables(slot_rps, for_scatter=True)
+        sg = self._state_ids(slot_rps, for_scatter=False)
+        ss = self._state_ids(slot_rps, for_scatter=True)
+        return self._decode_loads(
+            params, self.pools, gt, st, sg, ss,
+            jnp.asarray(pos.astype(np.int32)), jnp.asarray(toks))
 
     def install(self, rp: RequestPages, dense, filled: int,
                 shared_len: int = 0) -> None:

@@ -124,7 +124,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
             decode_tokens=min(s.max_slots, occ),
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
             weight_bytes=s.weight_bytes,
-            replica_weight_bytes=s.replica_weight_bytes)
+            replica_weight_bytes=s.replica_weight_bytes,
+            **self._resident_kw())
 
     def _fits_extra(self, extra_bytes: float, occ_after: int) -> bool:
         s = self.scfg
@@ -133,7 +134,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
             decode_tokens=min(s.max_slots, occ_after),
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
             weight_bytes=s.weight_bytes,
-            replica_weight_bytes=s.replica_weight_bytes)
+            replica_weight_bytes=s.replica_weight_bytes,
+            **self._resident_kw())
 
     # -- intake --------------------------------------------------------------
 
@@ -149,7 +151,8 @@ class PagedScheduler(ContinuousBatchingScheduler):
                 self.cfg, s.hw, page_bytes=wc, decode_tokens=1,
                 prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
                 weight_bytes=s.weight_bytes,
-                replica_weight_bytes=s.replica_weight_bytes):
+                replica_weight_bytes=s.replica_weight_bytes,
+                **self._resident_kw()):
             raise ValueError(
                 f"request {req.rid} can never be admitted: its worst-case "
                 f"pages ({wc / 1e9:.2f} GB) plus weights exceed "
@@ -282,9 +285,7 @@ class PagedScheduler(ContinuousBatchingScheduler):
         spans = chunk_spans(len(req.tokens), self.scfg.prefill_chunk)
         start, stop = spans[req.chunks_done]
         seg = jnp.asarray(req.tokens[None, start:stop], jnp.int32)
-        logits, req.cache = engine.prefill_chunk(
-            self.params, self.cfg, self.ctx, req.cache, seg,
-            self.scfg.cache_len)
+        logits, req.cache = self._prefill_compute(req, seg)
         req.chunks_done += 1
         self.prefill_chunks += 1
         if (self.trie is not None and stop % self.align == 0
@@ -358,6 +359,9 @@ class PagedScheduler(ContinuousBatchingScheduler):
         super()._requeue_active(now)
 
     def _decode_wave(self, now: float) -> None:
+        if self._expert_aware:
+            self._decode_wave_expert(now)
+            return
         s = self.scfg
         toks = np.zeros((s.max_slots, 1, 1), np.int32)
         pos = np.zeros((s.max_slots,), np.int32)
@@ -390,6 +394,55 @@ class PagedScheduler(ContinuousBatchingScheduler):
         for slot, req in list(self.active.items()):
             req.pos += 1
             self._append_token(req, logits[slot, 0, -1], now)
+
+    # -- expert-aware wave hooks (docs/DESIGN.md §Residency) -----------------
+
+    def _wave_fault_ok(self, exc: Exception) -> bool:
+        return is_oom_error(exc) or isinstance(exc, PagesExhausted)
+
+    def _wave_recover(self, now: float) -> None:
+        self.faults += 1
+        self._requeue_active(now)
+        if jax.default_backend() != "cpu":
+            self._rebuild_pools()
+
+    def _advance_member(self, req: Request) -> None:
+        req.pos += 1
+
+    def _run_wave(self, members: list, mask: np.ndarray):
+        """Paged member wave to the residency fixpoint.  Membership rides
+        the page tables — non-member slots get ``rp=None`` (zero-page
+        reads, scratch-page writes), so even the committed clean run never
+        touches a non-member's pages; discarded demand re-runs reuse the
+        unchanged input pools."""
+        s = self.scfg
+        toks = np.zeros((s.max_slots, 1, 1), np.int32)
+        pos = np.zeros((s.max_slots,), np.int32)
+        for slot in members:
+            req = self.active[slot]
+            toks[slot, 0, 0] = req.next_token
+            pos[slot] = req.pos
+            # CoW before the wave, as in the FIFO path; ensure_writable is
+            # idempotent, so demand re-runs see the same owned block
+            self.pool.prepare_decode_write(req.rp, req.pos)
+        if self.injector is not None:
+            self.injector.maybe_fail_step(self.steps, "decode_wave")
+        slot_rps = [self.active[i].rp if mask[i] and i in self.active else None
+                    for i in range(s.max_slots)]
+        out = {}
+
+        def once():
+            logits, load, new_pools = self.pool.decode_wave_loads(
+                self.params, slot_rps, pos, toks)
+            out["logits"], out["pools"] = logits, new_pools
+            # non-member slots decoded garbage from the zero page: zero
+            # their load rows so unions/telemetry only see members
+            out["load"] = np.asarray(load) * mask[:, None, None]
+            return out["load"].sum(0) > 0, \
+                lambda: setattr(self.pool, "pools", out["pools"])
+
+        self._demand_fixpoint(once)
+        return np.asarray(out["logits"]), out["load"]
 
     def _rebuild_pools(self) -> None:
         if self.trie is not None:

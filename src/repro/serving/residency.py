@@ -1,0 +1,301 @@
+"""Expert-weight residency tier: host-offloaded cold experts, streamed in
+ahead of the decode wave that needs them (docs/DESIGN.md §Residency).
+
+MemFine's core trade — recompute/transfer for peak memory — applied to the
+weights themselves: decode is memory-bandwidth-bound by *activated expert
+weights*, not tokens (arXiv 2512.09277), so only a per-layer resident set
+of expert FFN weights (w1/w3/w2) stays on device.  Cold experts live in a
+permanent host mirror (numpy, captured at construction — restore is
+bitwise because the mirror IS the original bits) and their device rows are
+zeroed.  The telemetry-predicted set for the next wave is prefetched
+(modeled as a double-buffered stream, the weight analogue of the PR 8
+spill/restore machinery); anything the wave actually activates that
+prediction missed is demand-restored and the wave re-runs from its held
+pre-wave cache, so outputs stay bit-identical to the all-resident engine:
+
+* A run in which every *activated* expert held true weights is bitwise
+  equal to the all-resident run — non-activated experts contribute nothing
+  (dispatch gathers only routed rows; the dense oracle combines them at
+  zero weight), so zeroed cold rows are unobservable.
+* A run with a miss is discarded (the compiled steps the scheduler uses
+  for this path are non-donating and non-committing), the missing experts
+  are restored, and the step re-runs.  Layer-0 routing depends only on
+  dense weights, so each re-run fixes a strictly longer correct prefix of
+  MoE layers; the loop converges in <= L_moe * E iterations.
+
+Eviction is heat-driven (an EMA over observed per-layer loads — the same
+signal ``core/telemetry.py`` feeds MACT and placement), never touches the
+always-resident set (experts the engine-build ``PlacementSpec`` replicated
+— PR 9's hot experts), and runs *after* the wave: capacity is a target the
+memory model prices, and transient demand restores above it are reported
+honestly through the high-water mark.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+
+#: expert FFN leaves the tier streams (router/shared-expert weights are
+#: dense-stage: always resident)
+EXPERT_LEAVES = ("w1", "w3", "w2")
+
+#: demand-restore loop bound (paranoia: convergence is <= L_moe * E)
+RERUN_LIMIT = 64
+
+
+def moe_layer_refs(cfg: ModelConfig) -> List[Tuple[str, int, Optional[int]]]:
+    """Param-tree address of every MoE layer, in ``load_per_layer`` order.
+
+    Each ref is ``(head, index, period)``: ``params[head][index]["ffn"]``
+    holds the layer's MoE params, with ``period`` indexing the stacked
+    leading axis when the layer sits inside the scanned periods (pre and
+    rem layers have ``period=None``).  Mirrors ``transformer.init_params``
+    layout and ``forward``'s telemetry order (pre, periods period-major,
+    remainder) — pinned against ``num_moe_layers`` in tests.
+    """
+    refs: List[Tuple[str, int, Optional[int]]] = []
+    for i, spec in enumerate(cfg.prefix):
+        if spec.ffn == "moe":
+            refs.append(("pre", i, None))
+    if cfg.num_periods > 1:
+        for p in range(cfg.num_periods):
+            for i, spec in enumerate(cfg.pattern):
+                if spec.ffn == "moe":
+                    refs.append(("periods", i, p))
+        rem = cfg.remainder_layers
+    else:
+        rem = cfg.num_layers - len(cfg.prefix)
+    for i in range(rem):
+        if cfg.pattern[i % len(cfg.pattern)].ffn == "moe":
+            refs.append(("rem", i, None))
+    return refs
+
+
+def always_resident_sets(placements, num_layers: int,
+                         num_experts: int) -> List[frozenset]:
+    """Per-MoE-layer expert ids the residency tier must never offload: the
+    experts the engine-build placement replicated across peers
+    (docs/DESIGN.md §Placement) — replication marked them persistently hot,
+    and a replica row on another peer is useless if the canonical weights
+    just left the device."""
+    if placements is None:
+        return [frozenset()] * num_layers
+    if len(placements) != num_layers:
+        raise ValueError(f"{len(placements)} placements for {num_layers} "
+                         "MoE layers")
+    out = []
+    for spec in placements:
+        if spec is None:
+            out.append(frozenset())
+            continue
+        counts = spec.replica_counts()
+        out.append(frozenset(int(e) for e in np.flatnonzero(counts > 1)))
+    return out
+
+
+def _ffn_updated(params: dict, head: str, idx: int, updates: dict) -> dict:
+    """Functional params update: replace ``params[head][idx]["ffn"]`` leaves
+    without mutating any shared container (parity tests hand the same
+    params object to several schedulers)."""
+    layers = list(params[head])
+    layer = dict(layers[idx])
+    ffn = dict(layer["ffn"])
+    ffn.update(updates)
+    layer["ffn"] = ffn
+    layers[idx] = layer
+    out = dict(params)
+    out[head] = layers
+    return out
+
+
+class ExpertResidency:
+    """Per-layer resident-set manager over the model params pytree.
+
+    All methods are functional over ``params`` (they return a new pytree;
+    the caller — the scheduler — reassigns ``self.params``), while the
+    manager keeps the host mirror, resident sets, heat EMA and transfer
+    counters as its own state.
+    """
+
+    def __init__(self, params: dict, cfg: ModelConfig, capacity: int, *,
+                 always_resident: Optional[Sequence[frozenset]] = None,
+                 heat_decay: float = 0.6):
+        if cfg.moe is None:
+            raise ValueError("expert residency needs a MoE config")
+        self.cfg = cfg
+        self.refs = moe_layer_refs(cfg)
+        self.num_layers = len(self.refs)
+        self.num_experts = cfg.moe.num_experts
+        if not 1 <= capacity <= self.num_experts:
+            raise ValueError(f"resident capacity {capacity} outside "
+                             f"[1, {self.num_experts}]")
+        self.capacity = capacity
+        self.always = (list(always_resident) if always_resident is not None
+                       else [frozenset()] * self.num_layers)
+        if len(self.always) != self.num_layers:
+            raise ValueError(f"{len(self.always)} always-resident sets for "
+                             f"{self.num_layers} MoE layers")
+        for j, a in enumerate(self.always):
+            if len(a) > capacity:
+                raise ValueError(
+                    f"layer {j}: {len(a)} always-resident (replicated) "
+                    f"experts exceed capacity {capacity}")
+        # permanent host mirror: the exact construction-time bits of every
+        # expert's FFN leaves — restore round-trips through it bitwise
+        self.host: List[dict] = []
+        for head, i, p in self.refs:
+            ffn = params[head][i]["ffn"]
+            self.host.append({
+                name: np.asarray(ffn[name][p] if p is not None else ffn[name])
+                for name in EXPERT_LEAVES})
+        self.resident: List[set] = [set(range(self.num_experts))
+                                    for _ in range(self.num_layers)]
+        self.heat = np.zeros((self.num_layers, self.num_experts))
+        self.heat_decay = heat_decay
+        self.reset_stats()
+
+    # -- accounting ----------------------------------------------------------
+
+    def reset_stats(self) -> None:
+        self.restores = 0          # expert-layer rows streamed host -> device
+        self.offloads = 0          # expert-layer rows zeroed on device
+        self.demand_restores = 0   # restores a wave had to block on (misses)
+        self.hwm_experts = max(len(s) for s in self.resident) \
+            if hasattr(self, "resident") else self.capacity
+
+    def stats(self) -> dict:
+        return {"restores": self.restores, "offloads": self.offloads,
+                "demand_restores": self.demand_restores,
+                "resident_experts_hwm": self.hwm_experts}
+
+    def resident_counts(self) -> np.ndarray:
+        return np.asarray([len(s) for s in self.resident], np.int64)
+
+    def _note_hwm(self) -> None:
+        self.hwm_experts = max(self.hwm_experts,
+                               max(len(s) for s in self.resident))
+
+    # -- heat ----------------------------------------------------------------
+
+    def note(self, load_per_layer) -> None:
+        """Fold an observed (L_moe, E) load matrix into the heat EMA — the
+        eviction policy's frequency signal (same decay contract as
+        ``LoadTelemetry``)."""
+        obs = np.asarray(load_per_layer, dtype=np.float64)
+        if obs.shape != self.heat.shape:
+            raise ValueError(f"load of shape {obs.shape}, expected "
+                             f"{self.heat.shape}")
+        self.heat = self.heat_decay * self.heat + (1 - self.heat_decay) * obs
+
+    # -- tier transitions ----------------------------------------------------
+
+    def offload_cold(self, params: dict) -> dict:
+        """Initial tiering: keep the always-resident experts plus the
+        lowest-id fillers up to capacity per layer; zero every other
+        expert's device rows.  (With no telemetry yet, low ids are as good
+        a guess as any — the first prefill's demand loop corrects it.)"""
+        for j in range(self.num_layers):
+            keep = set(self.always[j])
+            for e in range(self.num_experts):
+                if len(keep) >= self.capacity:
+                    break
+                keep.add(e)
+            drop = set(range(self.num_experts)) - keep
+            params = self._apply(params, j, drop, restore=False)
+            self.resident[j] = keep
+            self.offloads += len(drop)
+        self.hwm_experts = max(len(s) for s in self.resident)
+        return params
+
+    def missing(self, active: np.ndarray) -> List[Tuple[int, int]]:
+        """(layer, expert) pairs an (L_moe, E) bool activation matrix hits
+        that are NOT resident — what a wave must demand-restore before its
+        members' math is trustworthy."""
+        act = np.asarray(active)
+        if act.shape != (self.num_layers, self.num_experts):
+            raise ValueError(f"activation of shape {act.shape}, expected "
+                             f"({self.num_layers}, {self.num_experts})")
+        return [(j, int(e)) for j in range(self.num_layers)
+                for e in np.flatnonzero(act[j])
+                if int(e) not in self.resident[j]]
+
+    def ensure(self, params: dict, pairs: Iterable[Tuple[int, int]], *,
+               demand: bool = False) -> dict:
+        """Restore the given (layer, expert) pairs from the host mirror."""
+        by_layer: dict = {}
+        for j, e in pairs:
+            if e not in self.resident[j]:
+                by_layer.setdefault(j, set()).add(e)
+        for j, experts in by_layer.items():
+            params = self._apply(params, j, experts, restore=True)
+            self.resident[j] |= experts
+            self.restores += len(experts)
+            if demand:
+                self.demand_restores += len(experts)
+        self._note_hwm()
+        return params
+
+    def prefetch(self, params: dict, predicted: np.ndarray) -> dict:
+        """Stream the predicted set for the imminent wave: restore predicted
+        cold experts, then evict back toward capacity while protecting the
+        prediction (evicting what the next wave needs would thrash)."""
+        pred = np.asarray(predicted)
+        pairs = [(j, int(e)) for j in range(self.num_layers)
+                 for e in np.flatnonzero(pred[j])]
+        params = self.ensure(params, pairs)
+        keep = [frozenset(int(e) for e in np.flatnonzero(pred[j]))
+                | self.always[j] for j in range(self.num_layers)]
+        return self.evict_to_capacity(params, protect=keep)
+
+    def evict_to_capacity(self, params: dict,
+                          protect: Optional[Sequence[frozenset]] = None
+                          ) -> dict:
+        """Zero the coldest (heat-EMA) evictable experts above capacity per
+        layer.  ``protect`` shields a per-layer set beyond the always-
+        resident experts; a layer whose protected set exceeds capacity
+        simply stays over target (the hwm reports it)."""
+        for j in range(self.num_layers):
+            shield = set(self.always[j])
+            if protect is not None:
+                shield |= set(protect[j])
+            over = len(self.resident[j]) - self.capacity
+            if over <= 0:
+                continue
+            cands = sorted(self.resident[j] - shield,
+                           key=lambda e: (self.heat[j, e], e))
+            drop = set(cands[:over])
+            if drop:
+                params = self._apply(params, j, drop, restore=False)
+                self.resident[j] -= drop
+                self.offloads += len(drop)
+        return params
+
+    def _apply(self, params: dict, layer: int, experts: set,
+               restore: bool) -> dict:
+        """Write one layer's expert rows: host bits on restore, zeros on
+        offload.  Functional over params; periods leaves carry the stacked
+        (num_periods, E, ...) layout."""
+        if not experts:
+            return params
+        head, i, p = self.refs[layer]
+        ffn = params[head][i]["ffn"]
+        idx = jnp.asarray(sorted(experts), jnp.int32)
+        updates = {}
+        for name in EXPERT_LEAVES:
+            leaf = ffn[name]
+            if restore:
+                rows = jnp.asarray(self.host[layer][name][np.asarray(idx)])
+            else:
+                shape = ((len(experts),) + leaf.shape[2:] if p is not None
+                         else (len(experts),) + leaf.shape[1:])
+                rows = jnp.zeros(shape, leaf.dtype)
+            if p is not None:
+                updates[name] = leaf.at[p, idx].set(rows)
+            else:
+                updates[name] = leaf.at[idx].set(rows)
+        return _ffn_updated(params, head, i, updates)

@@ -49,10 +49,11 @@ from repro.configs.base import GPU_64G, HardwareProfile, ModelConfig
 from repro.core import memory_model as mm
 from repro.core.chunking import chunk_spans
 from repro.core.moe import DistContext
+from repro.core.telemetry import ExpertTelemetry
 from repro.models import transformer
 from repro.runtime.faults import FaultInjector
 from repro.runtime.guard import ServingGuard, is_oom_error
-from repro.serving import engine
+from repro.serving import engine, residency
 
 WAITING, PREFILL, ACTIVE, FINISHED, SHED = ("waiting", "prefill", "active",
                                             "finished", "shed")
@@ -83,6 +84,8 @@ class Request:
                                         # re-prefill must NOT resample
     requeues: int = 0
     retry_after: Optional[float] = None # quote handed back when shed
+    wave_wait: int = 0                  # consecutive decode waves skipped
+                                        # while ACTIVE (starvation guard)
     # -- paged scheduler runtime (docs/DESIGN.md §Paging) -------------------
     rp: object = None                   # RequestPages while resident
     pos: int = 0                        # decode write position (host-side)
@@ -114,6 +117,26 @@ class ServeConfig:
                                         # expert placement's replica slots
                                         # (docs/DESIGN.md §Placement); priced
                                         # by admission like any weight bytes
+    # -- expert-aware decode + residency (docs/DESIGN.md §Residency) --------
+    expert_batching: bool = False       # group waves by predicted expert
+                                        # overlap instead of FIFO age order
+    wave_size: int = 0                  # max members per decode wave (0 =
+                                        # every resident; >0 engages the
+                                        # masked subset step, FIFO-ordered
+                                        # unless expert_batching)
+    max_wave_wait: int = 4              # starvation guard: a resident that
+                                        # skipped this many waves is force-
+                                        # included in the next one
+    resident_experts: int = 0           # per-MoE-layer resident expert
+                                        # capacity (0 = all resident, tier
+                                        # off); cold experts host-offloaded
+    prefetch_experts: int = 1           # modeled in-flight prefetch buffer
+                                        # (per-expert-layer weight rows the
+                                        # memory model prices on top of the
+                                        # resident set)
+    probe_router: bool = False          # router-only probe on prompt tokens
+                                        # seeds the prefetch prediction for
+                                        # requests with no telemetry yet
 
 
 class ContinuousBatchingScheduler:
@@ -139,6 +162,31 @@ class ContinuousBatchingScheduler:
         self._decode = engine._jit(jax.vmap(
             lambda p, c, t: transformer.decode_step(p, cfg, ctx, c, t),
             in_axes=(None, 0, 0)), donate_cache_arg=1)
+        # expert-aware decode + weight-residency tier (§Residency): any of
+        # the three knobs engages the masked subset step, which also reports
+        # per-slot routed loads (the telemetry feed)
+        self._expert_aware = (scfg.expert_batching or scfg.wave_size > 0
+                              or scfg.resident_experts > 0)
+        self.telemetry: Optional[ExpertTelemetry] = None
+        self.residency = None
+        self._probe = None
+        if self._expert_aware:
+            if cfg.moe is None:
+                raise ValueError("expert-aware serving (expert_batching / "
+                                 "wave_size / resident_experts) needs a MoE "
+                                 f"config; {cfg.name!r} is dense")
+            n_moe = transformer.num_moe_layers(cfg)
+            self.telemetry = ExpertTelemetry(n_moe, cfg.moe.num_experts)
+            self._decode_masked = engine.get_decode_step_masked(cfg, ctx)
+            if scfg.probe_router:
+                self._probe = engine.get_router_probe(cfg, ctx)
+            if scfg.resident_experts > 0:
+                always = residency.always_resident_sets(
+                    ctx.placements, n_moe, cfg.moe.num_experts)
+                self.residency = residency.ExpertResidency(
+                    params, cfg, scfg.resident_experts,
+                    always_resident=always)
+                self.params = self.residency.offload_cold(self.params)
         self.injector = injector
         self.guard = ServingGuard(deadline_s=scfg.deadline_s,
                                   max_waiting=scfg.max_waiting)
@@ -153,6 +201,16 @@ class ContinuousBatchingScheduler:
         self.shed: list[Request] = []
         self.requeued: int = 0
         self.faults: int = 0
+        self._reset_wave_stats()
+
+    def _reset_wave_stats(self) -> None:
+        self.expert_waves = 0          # waves run through the masked step
+        self.wave_distinct_sum = 0     # sum over waves of distinct activated
+        self.wave_members_sum = 0      # experts / of member count
+        self.forced_includes = 0       # starvation-guard force-inclusions
+        self.prefetch_hits = 0         # activated expert-layer pairs already
+        self.prefetch_misses = 0       # resident / demand-restored mid-wave
+        self.demand_reruns = 0         # wave/chunk re-runs after a restore
 
     def reset(self) -> None:
         """Clear all request state and telemetry but keep the compiled
@@ -170,12 +228,27 @@ class ContinuousBatchingScheduler:
         self.shed = []
         self.requeued = 0
         self.faults = 0
+        self._reset_wave_stats()
+        if self.telemetry is not None:
+            self.telemetry.clear()
+        if self.residency is not None:
+            self.residency.reset_stats()
 
     # -- memory model -------------------------------------------------------
 
     def occupancy(self) -> int:
         """Requests currently holding cache memory (installed + prefilling)."""
         return len(self.active) + (1 if self._prefilling is not None else 0)
+
+    def _resident_kw(self) -> dict:
+        """Memory-model kwargs for the residency tier: with a capacity set,
+        admission prices only the resident experts plus the in-flight
+        prefetch buffer instead of the full expert table (§Residency)."""
+        s = self.scfg
+        if s.resident_experts <= 0:
+            return {}
+        return {"resident_experts": s.resident_experts,
+                "prefetch_experts": s.prefetch_experts}
 
     def modeled_bytes(self, requests: Optional[int] = None) -> float:
         s = self.scfg
@@ -184,7 +257,8 @@ class ContinuousBatchingScheduler:
             cache_len=s.cache_len, decode_tokens=s.max_slots,
             prefill_tokens=s.prefill_chunk, dtype_bytes=s.dtype_bytes,
             weight_bytes=s.weight_bytes,
-            replica_weight_bytes=s.replica_weight_bytes)
+            replica_weight_bytes=s.replica_weight_bytes,
+            **self._resident_kw())
 
     def _admissible(self, requests: int) -> bool:
         s = self.scfg
@@ -192,7 +266,8 @@ class ContinuousBatchingScheduler:
             self.cfg, s.hw, requests=requests, cache_len=s.cache_len,
             decode_tokens=s.max_slots, prefill_tokens=s.prefill_chunk,
             dtype_bytes=s.dtype_bytes, weight_bytes=s.weight_bytes,
-            replica_weight_bytes=s.replica_weight_bytes)
+            replica_weight_bytes=s.replica_weight_bytes,
+            **self._resident_kw())
 
     # -- request intake -----------------------------------------------------
 
@@ -288,13 +363,44 @@ class ContinuousBatchingScheduler:
         spans = chunk_spans(len(req.tokens), self.scfg.prefill_chunk)
         start, stop = spans[req.chunks_done]
         seg = jnp.asarray(req.tokens[None, start:stop], jnp.int32)
-        logits, req.cache = engine.prefill_chunk(
-            self.params, self.cfg, self.ctx, req.cache, seg,
-            self.scfg.cache_len)
+        logits, req.cache = self._prefill_compute(req, seg)
         req.chunks_done += 1
         self.prefill_chunks += 1
         if req.chunks_done == len(spans):
             self._install(req, logits, now)
+
+    def _prefill_compute(self, req: Request, seg):
+        """One prefill/extend chunk for ``req``.  Expert-aware mode uses the
+        loads variants (non-donating) so the chunk both feeds the request's
+        expert telemetry and, under residency, can re-run from the SAME
+        base cache after demand-restoring any cold expert it activated —
+        the installed cache is therefore bitwise the all-resident one."""
+        if not self._expert_aware:
+            return engine.prefill_chunk(self.params, self.cfg, self.ctx,
+                                        req.cache, seg, self.scfg.cache_len)
+        if (self.residency is not None and self._probe is not None
+                and req.chunks_done == 0):
+            # no telemetry yet: probe the prompt's routing on embeddings and
+            # prefetch the predicted experts before the first chunk
+            counts = np.asarray(self._probe(
+                self.params, jnp.asarray(np.asarray(seg[0], np.int32))))
+            self.params = self.residency.prefetch(self.params, counts.sum(0) > 0)
+        out = {}
+
+        def once():
+            logits, cache, load = engine.prefill_chunk(
+                self.params, self.cfg, self.ctx, req.cache, seg,
+                self.scfg.cache_len, return_load=True)
+            out["logits"], out["cache"] = logits, cache
+            out["load"] = np.asarray(load)
+            return out["load"] > 0, lambda: None
+
+        self._demand_fixpoint(once)
+        self.telemetry.update(req.rid, out["load"])
+        if self.residency is not None:
+            self.residency.note(out["load"])
+            self.params = self.residency.evict_to_capacity(self.params)
+        return out["logits"], out["cache"]
 
     def _install(self, req: Request, logits, now: float) -> None:
         """Join at a step boundary: copy the private prefill cache into the
@@ -342,8 +448,188 @@ class ContinuousBatchingScheduler:
         self.active.pop(req.slot, None)
         self.free_slots.append(req.slot)
         self.finished.append(req)
+        if self.telemetry is not None:
+            self.telemetry.forget(req.rid)
+
+    def _wave_fault_reset(self, now: float) -> None:
+        """Faulted wave: no token was appended, the slot pool may hold
+        garbage — requeue every accepted request and rebuild the (possibly
+        donated/torn) pool; the requeued requests' re-prefills repopulate
+        their slots."""
+        self.faults += 1
+        self._requeue_active(now)
+        one = transformer.init_cache(self.params, self.cfg,
+                                     1, self.scfg.cache_len, jnp.float32)
+        self.cache = jax.tree.map(
+            lambda l: jnp.broadcast_to(
+                l[None], (self.scfg.max_slots,) + l.shape), one)
+
+    # -- expert-aware wave formation (docs/DESIGN.md §Residency) -------------
+
+    def _predicted_support(self, req: Request) -> Optional[np.ndarray]:
+        """(L_moe, E) bool predicted-activation mask for ``req``: telemetry
+        EMA support when seen, router probe as the cold-start fallback."""
+        sup = self.telemetry.support(req.rid)
+        if sup is not None:
+            return sup
+        if self._probe is not None:
+            toks = np.asarray(req.tokens[-8:], np.int32)
+            counts = np.asarray(self._probe(self.params, jnp.asarray(toks)))
+            return counts.sum(axis=0) > 0
+        return None
+
+    def _expert_set(self, req: Request) -> frozenset:
+        sup = self._predicted_support(req)
+        if sup is None:
+            return frozenset()
+        return frozenset(int(e) for e in np.flatnonzero(sup.any(axis=0)))
+
+    def _form_wave(self) -> list:
+        """Choose this wave's member slots.
+
+        Everyone decodes when the residents fit ``wave_size``.  Over
+        capacity, FIFO mode takes the longest-waiting residents; expert
+        mode seeds with the starvation-guard force-includes (wave_wait >=
+        max_wave_wait) and the longest-waiting request, then greedily adds
+        the resident whose predicted expert set grows the wave's union the
+        least — minimizing distinct activated experts per wave, which is
+        what the residency tier streams and decode bandwidth pays for."""
+        s = self.scfg
+        items = sorted(self.active.items())
+        cap = s.wave_size if s.wave_size > 0 else len(items)
+        if len(items) <= cap:
+            return [slot for slot, _ in items]
+        by_age = sorted(items, key=lambda kv: (-kv[1].wave_wait, kv[1].rid))
+        if not s.expert_batching:
+            return [slot for slot, _ in by_age[:cap]]
+        chosen = [kv for kv in by_age
+                  if kv[1].wave_wait >= s.max_wave_wait][:cap]
+        self.forced_includes += len(chosen)
+        taken = {slot for slot, _ in chosen}
+        pool = [kv for kv in by_age if kv[0] not in taken]
+        if not chosen and pool:
+            chosen.append(pool.pop(0))            # seed: longest-waiting
+        union = set()
+        for _, req in chosen:
+            union |= self._expert_set(req)
+        while len(chosen) < cap and pool:
+            best = min(pool, key=lambda kv: (
+                len(self._expert_set(kv[1]) - union),
+                -kv[1].wave_wait, kv[1].rid))
+            pool.remove(best)
+            chosen.append(best)
+            union |= self._expert_set(best[1])
+        return [slot for slot, _ in chosen]
+
+    def _demand_fixpoint(self, run_once):
+        """Drive one compute (decode wave or prefill chunk) to the residency
+        fixpoint.  ``run_once() -> (act, commit)``: ``act`` the (L_moe, E)
+        bool matrix of experts the run's MEMBERS routed through, ``commit``
+        a closure applying that run's state effects.  A run that touched a
+        cold expert is discarded, the expert demand-restored, and the run
+        re-issued from the same inputs — only the clean run commits, so
+        committed state is bitwise the all-resident run's.  Convergence:
+        layer-0 routing depends only on dense (always-resident) weights, so
+        each re-run trues a strictly longer prefix of MoE layers
+        (§Residency).  Returns the clean run's activation matrix."""
+        demand: set = set()
+        for _ in range(residency.RERUN_LIMIT):
+            act, commit = run_once()
+            if self.residency is None:
+                break
+            missing = self.residency.missing(act)
+            if not missing:
+                break
+            self.demand_reruns += 1
+            demand.update(missing)
+            self.params = self.residency.ensure(self.params, missing,
+                                                demand=True)
+        else:
+            raise RuntimeError("residency demand loop did not converge "
+                               f"within {residency.RERUN_LIMIT} re-runs")
+        commit()
+        if self.residency is not None:
+            pairs = {(int(j), int(e)) for j, e in zip(*np.nonzero(act))}
+            self.prefetch_misses += len(demand)
+            self.prefetch_hits += len(pairs - demand)
+        return act
+
+    # hook points the paged subclass overrides ------------------------------
+
+    def _wave_fault_ok(self, exc: Exception) -> bool:
+        return is_oom_error(exc)
+
+    def _wave_recover(self, now: float) -> None:
+        self._wave_fault_reset(now)
+
+    def _advance_member(self, req: Request) -> None:
+        pass                                    # paged: decode cursor bump
+
+    def _run_wave(self, members: list, mask: np.ndarray):
+        """Run one member wave to the fixpoint and commit its cache.
+        Returns (logits, load) host arrays over ALL slots; non-member load
+        rows are zero."""
+        toks = np.zeros((self.scfg.max_slots, 1, 1), np.int32)
+        for slot, req in self.active.items():
+            toks[slot, 0, 0] = req.next_token
+        if self.injector is not None:
+            self.injector.maybe_fail_step(self.steps, "decode_wave")
+        toks_j, mask_j = jnp.asarray(toks), jnp.asarray(mask)
+        out = {}
+
+        def once():
+            logits, new_cache, load = self._decode_masked(
+                self.params, self.cache, toks_j, mask_j)
+            out["logits"], out["cache"] = logits, new_cache
+            out["load"] = np.asarray(load)
+            return out["load"].sum(0) > 0, \
+                lambda: setattr(self, "cache", out["cache"])
+
+        self._demand_fixpoint(once)
+        return np.asarray(out["logits"]), out["load"]
+
+    def _decode_wave_expert(self, now: float) -> None:
+        members = self._form_wave()
+        if not members:
+            return
+        mask = np.zeros((self.scfg.max_slots,), bool)
+        mask[members] = True
+        if self.residency is not None:
+            predicted = np.zeros((self.residency.num_layers,
+                                  self.residency.num_experts), bool)
+            for slot in members:
+                sup = self._predicted_support(self.active[slot])
+                if sup is not None:
+                    predicted |= sup
+            self.params = self.residency.prefetch(self.params, predicted)
+        try:
+            logits, load = self._run_wave(members, mask)
+        except Exception as exc:
+            if not self._wave_fault_ok(exc):
+                raise
+            self._wave_recover(now)
+            return
+        self.decode_waves += 1
+        self.expert_waves += 1
+        self.wave_members_sum += len(members)
+        self.wave_distinct_sum += int(
+            np.count_nonzero(load.sum(axis=(0, 1)) > 0))
+        member_set = set(members)
+        for slot, req in list(self.active.items()):
+            if slot not in member_set:
+                req.wave_wait += 1
+                continue
+            req.wave_wait = 0
+            self.telemetry.update(req.rid, load[slot])
+            self._advance_member(req)
+            self._append_token(req, logits[slot, 0, -1], now)
+        if self.residency is not None:
+            self.residency.note(load.sum(axis=0))
 
     def _decode_wave(self, now: float) -> None:
+        if self._expert_aware:
+            self._decode_wave_expert(now)
+            return
         toks = np.zeros((self.scfg.max_slots, 1, 1), np.int32)
         for slot, req in self.active.items():
             toks[slot, 0, 0] = req.next_token
@@ -356,17 +642,8 @@ class ContinuousBatchingScheduler:
         except Exception as exc:          # is where a real OOM surfaces
             if not is_oom_error(exc):
                 raise
-            # faulted wave: no token was appended, the slot pool may hold
-            # garbage — requeue every accepted request and start clean
-            self.faults += 1
-            self._requeue_active(now)
-            # the wave's donated slot pool may be torn — rebuild it; the
-            # requeued requests' re-prefills repopulate their slots
-            one = transformer.init_cache(self.params, self.cfg, 1,
-                                         self.scfg.cache_len, jnp.float32)
-            self.cache = jax.tree.map(
-                lambda l: jnp.broadcast_to(
-                    l[None], (self.scfg.max_slots,) + l.shape), one)
+            # the wave's donated slot pool may be torn — rebuild it
+            self._wave_fault_reset(now)
             return
         self.decode_waves += 1
         for slot, req in list(self.active.items()):
@@ -429,4 +706,17 @@ class ContinuousBatchingScheduler:
                 if self.shed else 0.0),
             "requeues": self.requeued,
             "faults": self.faults,
+            # -- expert-aware wave + residency counters (§Residency) --------
+            "expert_waves": self.expert_waves,
+            "mean_distinct_experts": (self.wave_distinct_sum
+                                      / self.expert_waves
+                                      if self.expert_waves else 0.0),
+            "mean_wave_occupancy": (self.wave_members_sum / self.expert_waves
+                                    if self.expert_waves else 0.0),
+            "forced_includes": self.forced_includes,
+            "prefetch_hits": self.prefetch_hits,
+            "prefetch_misses": self.prefetch_misses,
+            "demand_reruns": self.demand_reruns,
+            **({"residency": self.residency.stats()}
+               if self.residency is not None else {}),
         }
